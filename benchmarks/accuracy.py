@@ -1,0 +1,28 @@
+"""Paper §11 accuracy table: GNU-diff analogue — pool results must equal
+the single-worker individual-test run exactly; sequential-reuse mode
+differs (different stream positions) but stays valid (no suspects)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(rows):
+    from repro.core.battery import build_battery
+    from repro.core.pool import make_batch_runner, run_sequential
+    from repro.core.scheduler import make_plan
+    from repro.core import stitch
+    from repro.launch.mesh import make_pool_mesh
+    from repro.rng.generators import GEN_IDS
+
+    entries = build_battery("smallcrush", 0.125)
+    mesh = make_pool_mesh()
+    stats_seq, ps_seq = run_sequential(entries, 3, GEN_IDS["pcg32"])
+    runner = make_batch_runner(entries, mesh)
+    plan = make_plan([e.cost for e in entries], 1, "lpt")
+    st, ps = runner(np.asarray(plan.assignment), np.int32(3),
+                    np.int32(GEN_IDS["pcg32"]))
+    res = stitch.fold(plan.assignment, np.asarray(st), np.asarray(ps))
+    equal = sum(np.isclose(res[i][1], float(ps_seq[i]), rtol=1e-6)
+                for i in range(len(entries)))
+    rows.append(("accuracy_pool_vs_individual", 0.0,
+                 f"identical={equal}/{len(entries)}"))

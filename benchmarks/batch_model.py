@@ -1,0 +1,21 @@
+"""Paper §11 batch model: 106 tests, cores in {40, 70, 90} -> batches
+{3, 2, 2}; and the paper's wall-time prediction T ~= batches * t_batch.
+Also the beyond-paper LPT scheduler's makespan on the real (skewed) battery
+costs."""
+from __future__ import annotations
+
+
+def run(rows):
+    from repro.core.battery import build_battery
+    from repro.core.scheduler import make_plan
+
+    entries = build_battery("bigcrush", 1.0)
+    costs = [e.cost for e in entries]
+    for w in (40, 70, 90, 256):
+        rr = make_plan(costs, w, "roundrobin")
+        lpt = make_plan(costs, w, "lpt")
+        rows.append((f"batch_model_rr_{w}w", rr.est_makespan,
+                     f"batches={rr.rounds}"))
+        rows.append((f"batch_model_lpt_{w}w", lpt.est_makespan,
+                     f"batches={lpt.rounds};gain={rr.est_makespan / lpt.est_makespan:.2f}x;"
+                     f"ideal_frac={lpt.est_ideal / lpt.est_makespan:.2f}"))

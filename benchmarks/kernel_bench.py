@@ -1,0 +1,45 @@
+"""Kernel-vs-oracle timing (interpret mode on CPU — correctness-level
+numbers; real-TPU perf is structural, see BlockSpecs + EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _t(fn, *a):
+    fn(*a)
+    t0 = time.time()
+    for _ in range(3):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / 3 * 1e6
+
+
+def run(rows):
+    from repro.kernels.gf2_rank.ops import rank32
+    from repro.kernels.gf2_rank.ref import gf2_rank_ref
+    from repro.kernels.histogram.ops import bincount
+    from repro.kernels.histogram.ref import histogram_ref
+    from repro.kernels.flash_attention.ops import mha
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    key = jax.random.PRNGKey(0)
+    mats = jax.random.bits(key, (1024, 32), jnp.uint32)
+    rows.append(("kernel_gf2_rank_interp", _t(rank32, mats), "1024_mats"))
+    rows.append(("kernel_gf2_rank_ref", _t(jax.jit(gf2_rank_ref), mats), ""))
+
+    idx = jax.random.randint(key, (65536,), 0, 64)
+    rows.append(("kernel_histogram_interp", _t(lambda x: bincount(x, 64), idx),
+                 "64_bins_65536"))
+    rows.append(("kernel_histogram_ref",
+                 _t(jax.jit(lambda x: histogram_ref(x, 64)), idx), ""))
+
+    q = jax.random.normal(key, (1, 512, 4, 64))
+    rows.append(("kernel_flash_attn_interp",
+                 _t(lambda a: mha(a, a, a, scale=0.125), q), "s512_h4_d64"))
+    qf = q.transpose(0, 2, 1, 3).reshape(4, 512, 64)
+    rows.append(("kernel_flash_attn_ref",
+                 _t(jax.jit(lambda a: attention_ref(a, a, a, scale=0.125)),
+                    qf), ""))

@@ -1,0 +1,33 @@
+"""Per-arch reduced train-step wall time on CPU (smoke-scale; the full
+configs' performance story is the dry-run roofline in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def run(rows):
+    from repro.configs import ARCH_IDS, get_reduced
+    from repro.data.synthetic import batch_at
+    from repro.models import lm
+    from repro.train.optim import OptConfig, init_opt_state
+    from repro.train.step import make_train_step
+
+    for arch in ARCH_IDS:
+        cfg = get_reduced(arch)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        state = {"params": params, "opt": init_opt_state(params)}
+        step_fn = jax.jit(make_train_step(cfg, OptConfig()),
+                          donate_argnames=("state",))
+        frames = ((2, cfg.encoder_seq, cfg.d_model)
+                  if cfg.family == "audio" else None)
+        batch = batch_at(0, 0, 2, 64, cfg.vocab_size, frames)
+        state, m = step_fn(state, batch)          # compile
+        t0 = time.time()
+        for i in (1, 2, 3):
+            batch = batch_at(0, i, 2, 64, cfg.vocab_size, frames)
+            state, m = step_fn(state, batch)
+        jax.block_until_ready(m)
+        rows.append((f"lm_step_{arch}", (time.time() - t0) / 3 * 1e6,
+                     f"loss={float(m['loss']):.3f}"))

@@ -1,0 +1,65 @@
+"""Checkpoint IO: msgpack pytrees (battery progress + train state)."""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import msgpack
+import numpy as np
+
+import jax
+
+
+def _pack(obj):
+    if isinstance(obj, (np.ndarray, np.generic)):
+        a = np.asarray(obj)
+        return {b"__nd__": True, b"d": a.tobytes(), b"t": a.dtype.str,
+                b"s": list(a.shape)}
+    if isinstance(obj, jax.Array):
+        return _pack(np.asarray(obj))
+    return obj
+
+
+def _unpack(obj):
+    if isinstance(obj, dict) and obj.get(b"__nd__"):
+        return np.frombuffer(obj[b"d"], dtype=np.dtype(obj[b"t"])
+                             ).reshape(obj[b"s"]).copy()
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    """Atomic write (tmp + rename) — a crash mid-save never corrupts the
+    previous checkpoint (restartability discipline, DESIGN.md §5)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {"leaves": [_pack(x) for x in flat],
+               "treedef": str(treedef)}
+    blob = msgpack.packb(payload, default=_pack, use_bin_type=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    with os.fdopen(fd, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, path)
+
+
+def load_flat(path: str):
+    """Returns the list of leaves (caller re-applies its own structure)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True,
+                                  strict_map_key=False)
+    return [_unpack(x) for x in payload[b"leaves"]]
+
+
+def save_dict(path: str, d: dict) -> None:
+    save(path, d)
+
+
+def load_into(path: str, template: Any):
+    """Load leaves into the structure of `template`."""
+    leaves = load_flat(path)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path)

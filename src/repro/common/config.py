@@ -1,0 +1,204 @@
+"""Configuration dataclasses for CondorJAX.
+
+``ModelConfig`` is the single source of truth for every assigned architecture;
+``ShapeConfig`` describes one (seq_len, global_batch, kind) input-shape cell;
+``BatteryConfig`` describes a TestU01-style battery (the paper's workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def pad_to(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# model configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0                 # routed experts
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared: int = 0                  # always-on shared experts (DeepSeek)
+    d_ff_shared: int = 0
+    first_dense_layers: int = 0        # leading dense layers (DeepSeek-V2: 1)
+    d_ff_dense: int = 0                # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2)."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block config."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 8               # 1 sLSTM per `slstm_every` blocks (7:1)
+    proj_factor_m: float = 2.0         # mLSTM up-projection factor
+    proj_factor_s: float = 4.0 / 3.0   # sLSTM FFN factor
+    conv_width: int = 4
+    chunk: int = 128                   # mLSTM chunkwise-parallel length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                        # dense | moe | vlm | audio | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None     # default d_model // n_heads
+    act: str = "silu"                  # silu (SwiGLU) | gelu (GeGLU) | gelu_plain | relu2
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False              # Chameleon
+    rope: bool = True
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    # gemma2
+    attn_pattern: Tuple[str, ...] = ("global",)   # e.g. ("local","global")
+    local_window: int = 4096
+    attn_softcap: float = 0.0          # 0 disables
+    final_softcap: float = 0.0
+    query_scale: Optional[float] = None  # override 1/sqrt(head_dim)
+    post_block_norm: bool = False      # gemma2 post-norms
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # hybrid (zamba2): one shared attn+MLP block applied every k ssm layers
+    shared_attn_every: int = 0
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0               # fixed encoder frame count (stub frontend)
+
+    # modality stub: inputs are precomputed embeddings instead of token ids
+    frontend: str = "tokens"           # tokens | frames (audio stub) | fused (vlm: ids)
+
+    # numerics / memory knobs (per-arch presets; see DESIGN.md)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    adam_dtype: str = "float32"        # bf16 for the 340B preset (8-bit-Adam-style)
+    remat_policy: str = "full"         # full | dots | none
+    scan_group: int = 0                # 0 = single scan; else nested scan-of-scan
+    train_accum: int = 1               # gradient-accumulation microbatches
+
+    # ----- derived -----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Megatron-style vocab padding for clean TP sharding."""
+        return pad_to(self.vocab_size, 128)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic-history archs run the long_500k shape."""
+        return self.family in ("ssm", "hybrid")
+
+    def n_params(self) -> int:
+        """Analytic parameter count (matches init_params; used for rooflines)."""
+        from repro.models.lm import count_params  # late import, no jax needed
+        return count_params(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.lm import count_params
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# input-shape cells
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str                          # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a shape cell applies to an arch (with the reason for skips)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full-attention arch: 500k-history decode is out of family (see DESIGN.md)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# battery (the paper's workload)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatteryConfig:
+    name: str                          # smallcrush | crush | bigcrush
+    n_tests: int
+    scale: float = 1.0                 # sample-size multiplier vs. laptop baseline
+
+
+BATTERIES = {
+    "smallcrush": BatteryConfig("smallcrush", 10, 1.0),
+    "crush": BatteryConfig("crush", 96, 4.0),
+    "bigcrush": BatteryConfig("bigcrush", 106, 16.0),
+}
+
+
+# Roofline hardware constants (TPU v5e-class; see system brief).
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    peak_flops: float = 197e12         # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9              # bytes/s per chip
+    ici_bw: float = 50e9               # bytes/s per link
+    ici_links: int = 4                 # per chip on a 2D torus (used for roofline)
+    hbm_bytes: float = 16e9
+
+
+HW = HWConfig()

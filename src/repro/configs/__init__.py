@@ -1,0 +1,33 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "glm4-9b": "glm4_9b",
+    "gemma2-27b": "gemma2_27b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "chameleon-34b": "chameleon_34b",
+    "whisper-small": "whisper_small",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str):
+    return _mod(arch_id).CONFIG
+
+
+def get_reduced(arch_id: str):
+    return _mod(arch_id).reduced()

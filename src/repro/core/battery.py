@@ -1,0 +1,135 @@
+"""Battery definitions: SmallCrush (10), Crush (96), BigCrush (106).
+
+Mirrors TestU01's structure: a battery is an ordered list of ENTRIES, each a
+fixed parameterization of one of the ten test kernels (stats/tests.py).
+Crush/BigCrush re-use the same kernels at more/larger parameter points —
+exactly how TestU01's batteries relate (paper §3.1). ``scale`` lets the same
+battery run laptop-sized (CI) or pod-sized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List
+
+from repro.stats import tests as T
+
+# relative per-word cost weights (scan-heavy kernels cost more per word)
+KERNEL_WEIGHT = {
+    "birthday": 1.0, "collision": 1.0, "gap": 1.2, "poker": 1.0,
+    "coupon": 6.0, "maxoft": 1.0, "weight": 0.6, "rank": 8.0,
+    "hamcorr": 0.6, "serial2d": 0.8,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TestEntry:
+    index: int
+    name: str
+    kernel: Callable            # bits -> (stat, p)
+    n_words: int                # uint32 words consumed
+    cost: float                 # scheduler cost estimate
+
+
+def _mk(index, kname, scale, **kw):
+    fn = T.KERNELS[kname]
+    words = {
+        "birthday": lambda k: k.get("n", 4096),
+        "collision": lambda k: k.get("n", 65536),
+        "gap": lambda k: k.get("n", 65536),
+        "poker": lambda k: k.get("n", 32768) * 5,
+        "coupon": lambda k: k.get("n", 65536),
+        "maxoft": lambda k: k.get("n", 16384) * k.get("t", 8),
+        "weight": lambda k: k.get("n", 65536),
+        "rank": lambda k: k.get("n_mats", 1024) * 32,
+        "hamcorr": lambda k: k.get("n", 65536),
+        "serial2d": lambda k: k.get("n", 65536) * 2,
+    }[kname](kw)
+    name = kname + ("" if not kw else "_" + "_".join(
+        f"{a}{v}" for a, v in sorted(kw.items())))
+    return TestEntry(index, name, functools.partial(fn, **kw), words,
+                     words * KERNEL_WEIGHT[kname] * scale)
+
+
+_BASE = [  # SmallCrush: one instance of each kernel (explicit params so
+    # `scale` applies; kernel defaults restated)
+    ("birthday", dict(n=4096, tbits=30)), ("collision", dict(n=65536, kbits=26)),
+    ("gap", dict(n=65536, beta=0.125)), ("poker", dict(n=32768)),
+    ("coupon", dict(n=65536, d=8)), ("maxoft", dict(n=16384, t=8)),
+    ("weight", dict(n=65536)), ("rank", dict(n_mats=1024)),
+    ("hamcorr", dict(n=65536)), ("serial2d", dict(n=65536, d=64)),
+]
+
+# Crush/BigCrush parameter grids (per kernel). Sizes scale with `scale`.
+_VARIANTS = {
+    # (n, tbits) pairs keep lambda = n^3/4k in 2..128 (Poisson regime)
+    "birthday": [dict(n=1024, tbits=26), dict(n=2048, tbits=28),
+                 dict(n=2048, tbits=30), dict(n=4096, tbits=30),
+                 dict(n=8192, tbits=30), dict(n=4096, tbits=28),
+                 dict(n=1024, tbits=24), dict(n=2048, tbits=26),
+                 dict(n=2048, tbits=24)],
+    "collision": [dict(n=n, kbits=k) for n in (32768, 65536, 131072)
+                  for k in (24, 26, 28)],
+    "gap": [dict(n=n, beta=b) for n in (32768, 65536, 131072)
+            for b in (0.0625, 0.125, 0.25)],
+    "poker": [dict(n=n) for n in (16384, 32768, 65536, 131072)],
+    "coupon": [dict(n=n, d=d) for n in (32768, 65536) for d in (4, 8, 16)],
+    "maxoft": [dict(n=n, t=t) for n in (8192, 16384, 32768)
+               for t in (4, 8, 16)],
+    "weight": [dict(n=n) for n in (32768, 65536, 131072, 262144)],
+    "rank": [dict(n_mats=m) for m in (512, 1024, 2048, 4096)],
+    "hamcorr": [dict(n=n) for n in (32768, 65536, 131072, 262144)],
+    "serial2d": [dict(n=n, d=d) for n in (32768, 65536, 131072)
+                 for d in (16, 64, 128)],
+}
+
+
+def _scaled(kw, kname, scale):
+    import math
+    kw = dict(kw)
+    orig_n = kw.get("n", 0)
+    for key in ("n", "n_mats"):
+        if key in kw:
+            kw[key] = max(int(kw[key] * scale), 256)
+    if kname == "birthday" and "n" in kw:
+        # keep the Poisson rate lambda = n^3/4k invariant under scaling;
+        # if tbits clamps, re-solve n from the target lambda instead
+        lam0 = orig_n ** 3 / (4.0 * (1 << kw.get("tbits", 30)))
+        tb = kw.get("tbits", 30) + round(3 * math.log2(max(scale, 1e-9)))
+        kw["tbits"] = min(max(tb, 16), 30)
+        kw["n"] = max(int(round((lam0 * 4 * (1 << kw["tbits"])) ** (1 / 3))),
+                      128)
+    if kname == "collision" and "n" in kw:
+        # keep lambda = n^2/2k invariant (collision count regime)
+        kb = kw.get("kbits", 26) + round(2 * math.log2(max(scale, 1e-9)))
+        kw["kbits"] = min(max(kb, 14), 30)
+    return kw
+
+
+def build_battery(name: str, scale: float = 1.0) -> List[TestEntry]:
+    if name == "smallcrush":
+        combos = [(k, _scaled(kw, k, scale)) for k, kw in _BASE]
+    elif name in ("crush", "bigcrush"):
+        target = 96 if name == "crush" else 106
+        combos = []
+        pools = {k: list(v) for k, v in _VARIANTS.items()}
+        order = list(_VARIANTS)
+        i = 0
+        while len(combos) < target:
+            k = order[i % len(order)]
+            if pools[k]:
+                combos.append((k, _scaled(pools[k].pop(0), k, scale)))
+            i += 1
+            if i > 10 * target:                  # pools exhausted -> rescale
+                for k2 in order:
+                    pools[k2] = [dict(kw, n=int(kw.get("n", 65536) * 2))
+                                 if "n" in kw else kw
+                                 for kw in _VARIANTS[k2]]
+        combos = combos[:target]
+    else:
+        raise KeyError(name)
+    return [_mk(i, k, scale, **kw) for i, (k, kw) in enumerate(combos)]
+
+
+def max_words(entries: List[TestEntry]) -> int:
+    return max(e.n_words for e in entries)

@@ -1,0 +1,92 @@
+"""SPMD battery pool — the HTCondor pool mapped onto a device mesh.
+
+One compiled program covers the whole battery: a worker's round executes
+``lax.switch`` over the uniform job table (every test kernel has signature
+``bits -> (stat, p)``), with the job's bit-stream derived from
+``(seed, test_id)`` — fresh-generator-per-test semantics (paper §4.1).
+
+``run_round`` dispatches ONE round across workers via ``shard_map`` (the
+paper's "submit a batch, wait for output files"); the host driver in
+``core/queue.py`` loops rounds so progress is checkpointable between
+batches, exactly like the paper's `master` polling `empty`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.battery import TestEntry, max_words
+from repro.rng.generators import gen_block_by_id, x64
+
+
+def _job_fn(entries: List[TestEntry], n_words: int):
+    """(job_id, seed, gen_id) -> (stat, p). job_id == -1 -> idle."""
+    branches = [lambda bits, e=e: tuple(
+        jnp.asarray(v, jnp.float32) for v in e.kernel(bits))
+        for e in entries]
+    branches.append(lambda bits: (jnp.float32(0.0), jnp.float32(jnp.nan)))
+
+    def run(job_id, seed, gen_id):
+        with x64():
+            bits = gen_block_by_id(gen_id, seed, jnp.maximum(job_id, 0),
+                                   n_words)
+        idx = jnp.where(job_id < 0, len(entries), job_id)
+        return jax.lax.switch(jnp.clip(idx, 0, len(entries)), branches, bits)
+
+    return run
+
+
+def make_round_runner(entries: List[TestEntry], mesh):
+    """Compiled fn: (round_assignment (W,), seed, gen_id) -> stats, ps (W,)."""
+    n_words = max_words(entries)
+    job = _job_fn(entries, n_words)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=(P("workers"), P(), P()),
+        out_specs=(P("workers"), P("workers")), check_vma=False)
+    def round_fn(jobs, seed, gen_id):
+        stat, p = job(jobs[0], seed, gen_id)
+        return stat[None], p[None]
+
+    return jax.jit(round_fn)
+
+
+def make_batch_runner(entries: List[TestEntry], mesh):
+    """Whole-plan runner: (plan (R, W), seed, gen_id) -> (R, W) stats/ps.
+    Single dispatch — used by benchmarks; the checkpointing driver prefers
+    round-by-round."""
+    n_words = max_words(entries)
+    job = _job_fn(entries, n_words)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=(P(None, "workers"), P(), P()),
+        out_specs=(P(None, "workers"), P(None, "workers")), check_vma=False)
+    def plan_fn(jobs, seed, gen_id):
+        def body(_, jid):
+            s, p = job(jid[0], seed, gen_id)
+            return 0, (s, p)
+        _, (stats, ps) = jax.lax.scan(body, 0, jobs)
+        return stats[:, None], ps[:, None]
+
+    return jax.jit(plan_fn)
+
+
+def run_sequential(entries: List[TestEntry], seed: int, gen_id: int):
+    """Stock-TestU01 model: every test in order on ONE worker (baseline)."""
+    n_words = max_words(entries)
+    job = _job_fn(entries, n_words)
+
+    @jax.jit
+    def go(seed, gen_id):
+        def body(_, jid):
+            s, p = job(jid, seed, gen_id)
+            return 0, (s, p)
+        _, (stats, ps) = jax.lax.scan(
+            body, 0, jnp.arange(len(entries), dtype=jnp.int32))
+        return stats, ps
+
+    return go(jnp.asarray(seed), jnp.asarray(gen_id))

@@ -1,0 +1,63 @@
+"""superstitch — fold per-(round, worker) results into the battery report.
+
+The paper's `superstitch` concatenated 11..107 output files into
+results.txt and pulled the per-test summaries into stats.txt; here the
+"files" are the (rounds, workers) result arrays plus the plan that maps
+slots back to test indices. Suspicious p-values are flagged with TestU01's
+convention (outside [eps, 1-eps])."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+SUSPECT_P = 1e-4
+
+
+def fold(plan_assignment: np.ndarray, stats: np.ndarray, ps: np.ndarray,
+         results: Dict[int, tuple] | None = None) -> Dict[int, tuple]:
+    """Merge one round-set into {test_index: (stat, p)}."""
+    results = dict(results or {})
+    a = np.asarray(plan_assignment)
+    for (r, w), idx in np.ndenumerate(a):
+        if idx >= 0:
+            results[int(idx)] = (float(stats[r, w]), float(ps[r, w]))
+    return results
+
+
+def missing(results: Dict[int, tuple], n_tests: int) -> List[int]:
+    """Jobs with no / invalid results -> the HELD set (paper: condor hold)."""
+    out = []
+    for i in range(n_tests):
+        if i not in results:
+            out.append(i)
+            continue
+        stat, p = results[i]
+        if not (np.isfinite(stat) and np.isfinite(p) and 0.0 <= p <= 1.0):
+            out.append(i)
+    return out
+
+
+def report(entries, results: Dict[int, tuple], gen_name: str,
+           seed: int) -> str:
+    lines = [
+        "========= CondorJAX battery results =========",
+        f"generator: {gen_name}    seed: {seed}",
+        f"tests: {len(entries)}",
+        "-" * 46,
+    ]
+    n_suspect = 0
+    for e in entries:
+        stat, p = results.get(e.index, (float("nan"), float("nan")))
+        flag = ""
+        if not np.isfinite(p):
+            flag = "   <-- MISSING/HELD"
+        elif p < SUSPECT_P or p > 1 - SUSPECT_P:
+            flag = "   <-- SUSPECT"
+            n_suspect += 1
+        lines.append(f"[{e.index:3d}] {e.name:32s} stat={stat:12.4f} "
+                     f"p={p:10.3e}{flag}")
+    lines.append("-" * 46)
+    lines.append(f"suspect p-values: {n_suspect} "
+                 f"({'FAIL' if n_suspect else 'pass'})")
+    return "\n".join(lines)

@@ -1,0 +1,80 @@
+"""Activation sharding constraints (mesh-context aware, no-op without mesh).
+
+GSPMD sharding propagation can drop the batch sharding inside while-loop
+bodies (scan-over-layers backward, blocked-attention inner scans) and fall
+back to fully-replicated intermediates — catastrophic at global-batch scale.
+Pinning activations at module boundaries keeps propagation honest; this is
+the same discipline MaxText applies via logical axis constraints.
+
+``constrain(x, *logical)`` maps logical names -> mesh axes with divisibility
+guards, so a single call site works on every mesh (or none: unit tests run
+without a mesh and the helper is a no-op).
+"""
+from __future__ import annotations
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+def _current_mesh():
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return None
+    return mesh
+
+
+import os
+
+# Sequence-parallel residual stream (Megatron SP): sharding the 'seq' dim of
+# block inputs/outputs over 'model' turns the row-parallel TP all-reduces
+# into reduce-scatter + all-gather pairs (~half the bytes) and shrinks
+# replicated activations TP-fold. Measured win on unshardable-head archs
+# (qwen2/whisper) — see EXPERIMENTS.md §Perf iter 2. Off by default; the
+# dry-run enables it per-arch.
+SEQ_PARALLEL = os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1"
+
+_RULES = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "inner": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "seq": (),
+    "seq_sp": ("model",),      # only used when SEQ_PARALLEL
+    None: (),
+}
+
+
+def seq_axis():
+    return "seq_sp" if SEQ_PARALLEL else "seq"
+
+
+def constrain(x, *logical):
+    """Apply a sharding constraint by logical dim names; no-op without mesh."""
+    mesh = _current_mesh()
+    if mesh is None or x.ndim != len(logical):
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axes = []
+        for ax in _RULES.get(name, ()):
+            if ax in sizes and ax not in used:
+                prod = sizes[ax]
+                for a in axes:
+                    prod *= sizes[a]
+                if dim % prod == 0:
+                    axes.append(ax)
+                    used.add(ax)
+        if not axes:
+            spec.append(None)
+        elif len(axes) == 1:
+            spec.append(axes[0])
+        else:
+            spec.append(tuple(axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))

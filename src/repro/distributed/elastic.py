@@ -1,0 +1,24 @@
+"""Elastic re-meshing for the battery pool.
+
+The paper's war story (§7.4): machines vanish mid-project (re-imaged lab
+PCs). At pod scale the equivalent is losing slices. Because job streams are
+counter-based (order/worker-independent), shrinking the pool is *pure
+re-planning*: completed results stay valid, missing tests are re-packed
+onto the surviving workers. No state migrates.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+from repro.core.scheduler import Plan, replan
+from repro.core.stitch import missing
+
+
+def shrink_and_replan(results: Dict[int, tuple], n_tests: int,
+                      costs: Sequence[float], surviving_workers: int,
+                      mode: str = "lpt") -> Plan:
+    """Plan the remaining work for a reduced pool."""
+    todo = missing(results, n_tests)
+    if not todo:
+        return replan([], costs, max(surviving_workers, 1), mode)
+    return replan(todo, costs, max(surviving_workers, 1), mode)

@@ -1,0 +1,214 @@
+"""Logical-axis -> mesh-axis resolution (GSPMD named sharding rules).
+
+Parallelism mapping (see DESIGN.md §5):
+  DP    : batch over ('pod', 'data')
+  FSDP  : parameter 'embed' dims over 'data' (ZeRO-3; all-gather per scanned
+          layer), optimizer state sharded identically
+  TP    : 'heads'/'mlp'/'inner'/'vocab' over 'model' (skipped per-dim when the
+          dim is not divisible by the axis — e.g. qwen2's 12 heads on a
+          16-way axis fall back to replicated heads, MLP stays sharded)
+  EP    : 'experts' over 'model'
+  SP    : decode caches shard 'kv_heads' over 'model' when divisible, else
+          the *sequence* dim (flash-decoding-style split-K across chips)
+
+Every rule is divisibility-guarded so one rule set covers all 10 archs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models.params import P as ParamP
+
+# logical name -> preferred mesh axis for parameters
+PARAM_RULES = {
+    "experts": "model",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "inner": "model",
+    "heads_inner": "model",
+    "embed": "data",          # FSDP
+    "q_lora": None,
+    "kv_lora": None,
+    "head_dim": None,
+    "ssm_heads": "model",
+    "layers": None,
+    "inner_layers": None,
+}
+
+
+def _axis_size(mesh, name) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+# Experts smaller than this (bytes/leaf) are REPLICATED instead of
+# expert-parallel: for fine-grained MoE (granite: 512-wide experts) the EP
+# all-to-all moves more bytes than the experts compute — replicating ~200MB
+# of expert weights deletes TBs of collective traffic per step
+# (EXPERIMENTS.md §Perf iter 3).
+EP_MIN_BYTES = 512e6
+
+
+def resolve_param_spec(p: ParamP, mesh) -> PartitionSpec:
+    import numpy as _np
+    used = set()
+    out = []
+    small_experts = ("experts" in p.axes
+                     and int(_np.prod(p.shape)) * 4 < EP_MIN_BYTES)
+    for dim, ax in zip(p.shape, p.axes):
+        cand = PARAM_RULES.get(ax)
+        if ax == "experts" and small_experts:
+            cand = None
+        if ax == "mlp" and small_experts and "experts" in p.axes:
+            cand = "model"     # small experts: TP the expert mlp dim instead
+        if (cand and cand in mesh.axis_names and cand not in used
+                and dim % _axis_size(mesh, cand) == 0):
+            out.append(cand)
+            used.add(cand)
+        else:
+            out.append(None)
+    return PartitionSpec(*out)
+
+
+def param_shardings(cfg, mesh):
+    """NamedSharding tree parallel to model params."""
+    from repro.models.lm import model_spec
+    spec = model_spec(cfg)
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, resolve_param_spec(p, mesh)),
+        spec, is_leaf=lambda x: isinstance(x, ParamP))
+
+
+def batch_axes(mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
+    """Mesh axes for the batch dim of activations/inputs."""
+    cands = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while cands:
+        prod = 1
+        for a in cands:
+            prod *= _axis_size(mesh, a)
+        if global_batch % prod == 0:
+            return tuple(cands)
+        cands = cands[1:]
+    return None
+
+
+def data_sharding(mesh, global_batch: int) -> NamedSharding:
+    ax = batch_axes(mesh, global_batch)
+    return NamedSharding(mesh, PartitionSpec(ax, None))
+
+
+# ---------------------------------------------------------------------------
+# decode-cache shardings
+
+def _kv_spec(mesh, batch, seq, kv_heads, lead_dims=1):
+    """(units…, B, S, K, dh): prefer kv_heads on 'model', else seq (split-K)."""
+    msize = _axis_size(mesh, "model")
+    b_ax = batch_axes(mesh, batch)
+    if kv_heads % msize == 0:
+        body = [b_ax, None, "model", None]
+    elif seq % msize == 0:
+        body = [b_ax, "model", None, None]
+    else:
+        body = [b_ax, None, None, None]
+    return PartitionSpec(*([None] * lead_dims + body))
+
+
+def _seq_major_spec(mesh, batch, seq, lead_dims=1, trailing=1):
+    """(units…, B, S, feat…): shard seq on 'model' (latent caches)."""
+    msize = _axis_size(mesh, "model")
+    b_ax = batch_axes(mesh, batch)
+    seq_ax = "model" if seq % msize == 0 else None
+    return PartitionSpec(*([None] * lead_dims + [b_ax, seq_ax]
+                           + [None] * trailing))
+
+
+def _feat_spec(mesh, batch, shape, batch_idx, feat_idx):
+    """State tensors: shard one feature dim on 'model' if divisible."""
+    msize = _axis_size(mesh, "model")
+    b_ax = batch_axes(mesh, batch)
+    out = [None] * len(shape)
+    out[batch_idx] = b_ax
+    if shape[feat_idx] % msize == 0:
+        out[feat_idx] = "model"
+    return PartitionSpec(*out)
+
+
+def cache_pspecs(cfg, batch: int, max_seq: int, mesh):
+    """PartitionSpec tree mirroring ``repro.models.lm.init_cache``."""
+    fam = cfg.family
+    kh = cfg.n_kv_heads
+    out = {"pos": PartitionSpec()}
+    if fam in ("dense", "vlm"):
+        from repro.models.lm import _unit_structure
+        _, pat = _unit_structure(cfg)
+        kinds = pat if len(pat) > 1 else ("blk",)
+        kv = {"k": _kv_spec(mesh, batch, max_seq, kh),
+              "v": _kv_spec(mesh, batch, max_seq, kh)}
+        out["units"] = {k: dict(kv) for k in kinds}
+    elif fam == "moe":
+        m = cfg.moe
+        if cfg.mla is not None:
+            unit = {"ckv": _seq_major_spec(mesh, batch, max_seq),
+                    "kr": _seq_major_spec(mesh, batch, max_seq)}
+            if m.first_dense_layers:
+                out["head"] = dict(unit)
+            out["units"] = dict(unit)
+        else:
+            out["units"] = {"k": _kv_spec(mesh, batch, max_seq, kh),
+                            "v": _kv_spec(mesh, batch, max_seq, kh)}
+    elif fam == "audio":
+        out["units"] = {"k": _kv_spec(mesh, batch, max_seq, kh),
+                        "v": _kv_spec(mesh, batch, max_seq, kh)}
+        out["cross"] = {"k": _kv_spec(mesh, batch, cfg.encoder_seq, kh),
+                        "v": _kv_spec(mesh, batch, cfg.encoder_seq, kh)}
+    elif fam == "ssm":
+        from repro.models.xlstm import _mdims
+        x = cfg.xlstm
+        inner, heads, mdh = _mdims(cfg)
+        ns, nm = cfg.n_layers // x.slstm_every, x.slstm_every - 1
+        d = cfg.d_model
+        out["mlstm"] = {
+            "c": _feat_spec(mesh, batch, (ns, nm, batch, heads, mdh, mdh), 2, 4),
+            "n": _feat_spec(mesh, batch, (ns, nm, batch, heads, mdh), 2, 4),
+            "m": _feat_spec(mesh, batch, (ns, nm, batch, heads), 2, 3),
+            "conv": _feat_spec(mesh, batch,
+                               (ns, nm, batch, x.conv_width - 1, inner), 2, 4)}
+        out["slstm"] = {
+            k: _feat_spec(mesh, batch, (ns, batch, d), 1, 2)
+            for k in ("c", "n", "h", "m")}
+        out["slstm"]["conv"] = _feat_spec(
+            mesh, batch, (ns, batch, x.conv_width - 1, d), 1, 3)
+    elif fam == "hybrid":
+        from repro.models.ssm import _dims
+        s = cfg.ssm
+        d_inner, n_heads, conv_dim = _dims(cfg)
+        k = cfg.shared_attn_every
+        n_full = cfg.n_layers // k
+        tail = cfg.n_layers - n_full * k
+        out["attn"] = {"k": _kv_spec(mesh, batch, max_seq, kh),
+                       "v": _kv_spec(mesh, batch, max_seq, kh)}
+        out["mamba"] = {
+            "conv": _feat_spec(mesh, batch,
+                               (n_full, k, batch, s.d_conv - 1, conv_dim), 2, 4),
+            "ssm": _feat_spec(mesh, batch,
+                              (n_full, k, batch, n_heads, s.head_dim,
+                               s.d_state), 2, 3)}
+        if tail:
+            out["tail"] = {
+                "conv": _feat_spec(mesh, batch,
+                                   (tail, batch, s.d_conv - 1, conv_dim), 1, 3),
+                "ssm": _feat_spec(mesh, batch,
+                                  (tail, batch, n_heads, s.head_dim,
+                                   s.d_state), 1, 2)}
+    return out
+
+
+def cache_shardings(cfg, batch, max_seq, mesh):
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps),
+        cache_pspecs(cfg, batch, max_seq, mesh),
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: blocked causal flash attention (fwd, online softmax).
+
+Hardware twin of models/attention.py::_attend_blocked (same math, same
+oracle): q/k/v stream through VMEM in (BLOCK_Q, BLOCK_K) tiles; scores live
+only tile-at-a-time; running (m, l, acc) scratch carries the online softmax
+across the innermost kv grid dim. Supports the gemma2 logit softcap.
+
+Grid: (B*H, n_q_blocks, n_kv_blocks), kv innermost; the output block is
+revisited across kv steps and finalized (acc/l) on the last one. BLOCK
+sizes are MXU-aligned (128); head_dim should be a multiple of 128 on real
+TPUs (interpret mode accepts any).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG = -2.3819763e38
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_s, m_s, l_s, *,
+               scale, softcap, causal, n_k):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0].astype(jnp.float32)                       # (Bq, dh)
+    k = k_ref[0].astype(jnp.float32)                       # (Bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        qpos = iq * BLOCK_Q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        kpos = ik * BLOCK_K + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_s[...] = l_s[...] * alpha + p.sum(axis=1)
+    acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _final():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-37)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "softcap", "causal",
+                                    "interpret"))
+def flash_attention(q, k, v, *, scale: float, softcap: float = 0.0,
+                    causal: bool = True, interpret: bool = True):
+    """q/k/v: (BH, S, dh) -> (BH, S, dh). S % 128 == 0 (callers pad)."""
+    bh, s, dh = q.shape
+    t = k.shape[1]
+    assert s % BLOCK_Q == 0 and t % BLOCK_K == 0, (s, t)
+    n_q, n_k = s // BLOCK_Q, t // BLOCK_K
+    kern = functools.partial(_fa_kernel, scale=scale, softcap=softcap,
+                             causal=causal, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BLOCK_K, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, dh), jnp.float32),
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

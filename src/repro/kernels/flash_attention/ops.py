@@ -1,0 +1,22 @@
+"""jit'd public wrapper: (B, S, H, dh) layout + GQA head grouping."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def mha(q, k, v, *, scale, softcap=0.0, causal=True, interpret=True):
+    """q: (B, S, H, dh); k/v: (B, T, K, dh) with H % K == 0 (GQA repeat)."""
+    b, s, h, dh = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], dh)
+    o = flash_attention(qf, kf, vf, scale=scale, softcap=softcap,
+                        causal=causal, interpret=interpret)
+    return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash_attention."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale, softcap=0.0, causal=True):
+    """q/k/v: (BH, S, dh), fp32 reference."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        qn, kn = s.shape[1], s.shape[2]
+        mask = jnp.tril(jnp.ones((qn, kn), bool))
+        s = jnp.where(mask[None], s, -2.3819763e38)
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

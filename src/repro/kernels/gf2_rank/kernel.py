@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: bit-packed GF(2) matrix rank (MatrixRank test hot spot).
+
+TestU01 does word-level Gaussian elimination on CPU. TPU adaptation: a whole
+32x32 bit-matrix lives in ONE 32-lane uint32 vector register row, so a VMEM
+tile of (TILE_M, 32) holds TILE_M matrices and the 32-step elimination is a
+fully vectorized mask/XOR dance on the VPU — no MXU needed, no gather/swap
+(pivot selection via argmax over candidate masks).
+
+Grid: one program per TILE_M matrices. BlockSpec keeps the (TILE_M, 32)
+tile + (TILE_M,) rank output resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 256
+
+
+def _rank_kernel(mats_ref, rank_ref):
+    rows = mats_ref[...]                                   # (TILE_M, 32) u32
+    m = rows.shape[0]
+    used = jnp.zeros((m, 32), jnp.bool_)
+    rank = jnp.zeros((m,), jnp.int32)
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (m, 32), 1)
+
+    def body(i, st):
+        rows, used, rank = st
+        col = ((rows >> (31 - i).astype(jnp.uint32)) & 1) == 1
+        cand = col & ~used
+        has = cand.any(axis=1)
+        piv = jnp.argmax(cand, axis=1)                     # first candidate
+        pivrow = jnp.sum(jnp.where(ridx == piv[:, None], rows, 0), axis=1)
+        pivrow = jnp.where(has, pivrow, 0)
+        apply = col & (ridx != piv[:, None])
+        rows = jnp.where(apply, rows ^ pivrow[:, None], rows)
+        used = used | ((ridx == piv[:, None]) & has[:, None])
+        rank = rank + has.astype(jnp.int32)
+        return rows, used, rank
+
+    _, _, rank = jax.lax.fori_loop(0, 32, body, (rows, used, rank))
+    rank_ref[...] = rank
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gf2_rank(mats: jax.Array, interpret: bool = True) -> jax.Array:
+    """mats: (M, 32) uint32 (rows of 32x32 bit matrices) -> (M,) int32 ranks.
+
+    M must be a multiple of TILE_M (callers pad; the battery's matrix counts
+    are powers of two).
+    """
+    m = mats.shape[0]
+    assert m % TILE_M == 0, m
+    grid = (m // TILE_M,)
+    return pl.pallas_call(
+        _rank_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_M, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_M,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=interpret,
+    )(mats)

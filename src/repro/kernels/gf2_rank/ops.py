@@ -1,0 +1,16 @@
+"""jit'd public wrapper: padding + dispatch to the Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gf2_rank.kernel import TILE_M, gf2_rank
+
+
+def rank32(mats: jax.Array, interpret: bool = True) -> jax.Array:
+    """(M, 32) uint32 -> (M,) int32; pads M up to TILE_M internally."""
+    m = mats.shape[0]
+    pad = (-m) % TILE_M
+    if pad:
+        mats = jnp.pad(mats, ((0, pad), (0, 0)))
+    return gf2_rank(mats, interpret=interpret)[:m]

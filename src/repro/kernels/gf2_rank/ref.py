@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for gf2_rank (the battery's own implementation)."""
+from repro.stats.tests import gf2_rank32
+
+
+def gf2_rank_ref(mats):
+    return gf2_rank32(mats)

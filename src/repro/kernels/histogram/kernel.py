@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused bin-count (the gap/poker/weight/serial hot loop).
+
+Scatter-free TPU strategy: a chunk of pre-computed bin indices is compared
+against the bin iota — a (CHUNK, K) compare matrix reduced over CHUNK — so
+the accumulation is pure VPU work on MXU-friendly 128-lane tiles. The grid
+walks chunks; the output block is revisited (constant index_map) and
+accumulated across grid steps, with K kept VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 2048
+
+
+def _hist_kernel(idx_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]                                     # (CHUNK,) int32
+    k = out_ref.shape[0]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], k), 1)
+    hit = (idx[:, None] == bins).astype(jnp.float32)
+    out_ref[...] += jnp.sum(hit, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def histogram(idx: jax.Array, k: int, interpret: bool = True) -> jax.Array:
+    """idx: (N,) int32 in [0, k) -> (k,) float32 counts. N % CHUNK == 0."""
+    n = idx.shape[0]
+    assert n % CHUNK == 0, n
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=(n // CHUNK,),
+        in_specs=[pl.BlockSpec((CHUNK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(idx)

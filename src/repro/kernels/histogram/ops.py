@@ -1,0 +1,16 @@
+"""jit'd public wrapper: padding (+ tail-bin masking) for histogram."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram.kernel import CHUNK, histogram
+
+
+def bincount(idx: jax.Array, k: int, interpret: bool = True) -> jax.Array:
+    n = idx.shape[0]
+    pad = (-n) % CHUNK
+    if pad:
+        idx = jnp.concatenate([idx, jnp.full((pad,), k, jnp.int32)])
+    out = histogram(idx, k + (1 if pad else 0), interpret=interpret)
+    return out[:k]

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax.numpy as jnp
+
+
+def histogram_ref(idx, k):
+    return jnp.bincount(idx, length=k).astype(jnp.float32)

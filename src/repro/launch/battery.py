@@ -1,0 +1,50 @@
+"""One-command battery CLI — the paper's `master` script.
+
+  PYTHONPATH=src python -m repro.launch.battery \
+      --battery bigcrush --gen splitmix64 --workers 8 --scale 0.05
+
+Set ``--workers N`` (>1) to fork the pool onto N forced host devices (the
+dry-run trick, battery-sized); on a real TPU pod the same code runs on the
+flattened device mesh. Checkpoints progress per round; re-running the same
+command resumes (only missing tests execute).
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--battery", default="smallcrush",
+                    choices=["smallcrush", "crush", "bigcrush"])
+    ap.add_argument("--gen", default="splitmix64")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = all local devices")
+    ap.add_argument("--mode", default="lpt", choices=["lpt", "roundrobin"])
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.workers > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.workers}"
+
+    from repro.core.queue import run_battery          # noqa: E402 (after env)
+    from repro.launch.mesh import make_pool_mesh      # noqa: E402
+
+    mesh = make_pool_mesh(args.workers or None)
+    print(f"pool: {mesh.devices.size} workers | battery={args.battery} "
+          f"gen={args.gen} scale={args.scale} mode={args.mode}")
+    res = run_battery(args.battery, args.gen, args.seed, mesh,
+                      scale=args.scale, mode=args.mode,
+                      checkpoint_path=args.ckpt, progress=True)
+    print(res.report)
+    print(f"\nwall={res.wall_s:.1f}s rounds={res.rounds_run} "
+          f"retries={res.retries}")
+    suspects = res.report.count("SUSPECT")
+    sys.exit(0 if suspects == 0 else 1)
+
+
+if __name__ == "__main__":
+    main()

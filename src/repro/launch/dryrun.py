@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Dry-run only — tests/benches see the real device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.common.config import SHAPES, shape_applicable        # noqa: E402
+from repro.configs import ARCH_IDS, get_config                  # noqa: E402
+from repro.launch.inputs import input_specs                     # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.roofline import (analytic_flops,              # noqa: E402
+                                   analytic_hbm_bytes,
+                                   hlo_collective_bytes, roofline_terms)
+
+
+def build_step(cfg, shape_name: str):
+    """Returns (fn, donate_argnames) for the shape cell's step function."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        from repro.train.optim import OptConfig
+        from repro.train.step import make_train_step
+        step = make_train_step(cfg, OptConfig())
+
+        def train_step(state, batch):
+            return step(state, batch)
+
+        return train_step, ("state",)
+    if shape.kind == "prefill":
+        from repro.models.decode import prefill
+
+        if cfg.family == "audio":
+            def prefill_step(params, tokens, frames):
+                return prefill(params, tokens, cfg, frames=frames)
+        else:
+            def prefill_step(params, tokens):
+                return prefill(params, tokens, cfg)
+        return prefill_step, ()
+    from repro.models.decode import decode_step
+
+    def serve_step(params, cache, token):
+        return decode_step(params, cache, token, cfg)
+
+    return serve_step, ("cache",)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hlo_snippet: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single"}
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    fn, donate = build_step(cfg, shape_name)
+    specs = input_specs(cfg, shape_name, mesh)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, donate_argnames=donate).lower(**specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll_by_op, coll_total = hlo_collective_bytes(hlo)
+
+    flops = analytic_flops(cfg, shape_name, compiled=True)
+    useful = analytic_flops(cfg, shape_name, compiled=False)
+    hbm = analytic_hbm_bytes(cfg, shape_name, n_chips)
+    terms = roofline_terms(cfg, shape_name, n_chips, coll_total,
+                           flops=flops, hbm_bytes=hbm)
+
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_peak_est": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        cost_analysis={"flops_raw": cost.get("flops"),
+                       "bytes_raw": cost.get("bytes accessed")},
+        collectives=coll_by_op,
+        analytic={"flops_compiled": flops, "flops_useful": useful,
+                  "hbm_bytes": hbm},
+        roofline=terms,
+        hlo_bytes=len(hlo),
+    )
+    if hlo_snippet:
+        rec["hlo_head"] = hlo[:4000]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--hlo-out", default=None,
+                    help="also dump full compiled HLO text here")
+    args = ap.parse_args()
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh == "multi")
+    except Exception as e:  # noqa: BLE001 — recorded as a failed cell
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+
+    js = json.dumps(rec, indent=1, default=float)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(js)
+    print(js[:2000])
+    if rec.get("status") == "ok":
+        r = rec["roofline"]
+        print(f"DRYRUN OK {args.arch} {args.shape} {args.mesh}: "
+              f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+              f"collective={r['collective_s']:.3e}s dom={r['dominant']} "
+              f"frac={r['roofline_fraction']:.3f}")
+    elif rec.get("status") == "skip":
+        print(f"DRYRUN SKIP {args.arch} {args.shape}: {rec['reason']}")
+    else:
+        print(f"DRYRUN ERROR {args.arch} {args.shape} {args.mesh}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

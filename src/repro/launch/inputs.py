@@ -1,0 +1,92 @@
+"""Abstract input specs (ShapeDtypeStruct + NamedSharding) per (arch, shape).
+
+The same pattern shannon/kernels uses: weak-type-correct, shardable, zero
+device allocation. ``input_specs(arch, shape, mesh)`` returns kwargs for
+``jax.jit(step).lower(**specs)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.common.config import SHAPES, ModelConfig, ShapeConfig
+from repro.distributed.sharding import (cache_shardings, data_sharding,
+                                        param_shardings)
+from repro.models.lm import abstract_params, init_cache
+
+
+def _attach(abs_tree, sh_tree):
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abs_tree, sh_tree)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def abstract_state(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    """Abstract train state {params, opt} with shardings."""
+    p_abs = abstract_params(cfg)
+    p_sh = param_shardings(cfg, mesh)
+    params = _attach(p_abs, p_sh)
+    adt = jnp.dtype(cfg.adam_dtype)
+    mom = jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, adt, sharding=s),
+        p_abs, p_sh)
+    opt = {"m": mom, "v": mom,
+           "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                        sharding=_replicated(mesh))}
+    return {"params": params, "opt": opt}
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    dsh = data_sharding(mesh, b)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=dsh),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=dsh),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype),
+            sharding=dsh)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    cache_abs = jax.eval_shape(
+        functools.partial(init_cache, cfg, b, s))
+    cache_sh = cache_shardings(cfg, b, s, mesh)
+    return _attach(cache_abs, cache_sh)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh) -> Dict[str, Any]:
+    """kwargs tree for the step function of the given shape cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"state": abstract_state(cfg, mesh),
+                "batch": abstract_batch(cfg, shape, mesh)}
+    params = _attach(abstract_params(cfg), param_shardings(cfg, mesh))
+    if shape.kind == "prefill":
+        b = shape.global_batch
+        dsh = data_sharding(mesh, b)
+        out = {"params": params,
+               "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32,
+                                              sharding=dsh)}
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype), sharding=dsh)
+        return out
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    dsh = data_sharding(mesh, b)
+    return {"params": params,
+            "cache": abstract_cache(cfg, shape, mesh),
+            "token": jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=dsh)}

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization. The dry-run driver sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before importing jax
+(see dryrun.py); smoke tests and benches see the real single CPU device.
+
+Mesh layout (TPU v5e-class pods of 256 chips):
+  single pod : (16, 16)        axes ("data", "model")
+  multi pod  : (2, 16, 16)     axes ("pod", "data", "model")
+The battery pool (the paper's HTCondor-pool analogue) uses the flattened
+"workers" view of the same device set — see ``repro.core.pool``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (dry-run only)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_pool_mesh(n_workers: int | None = None):
+    """Flat 1-D mesh for the battery pool ('workers' axis)."""
+    devices = jax.devices()
+    n = n_workers or len(devices)
+    return jax.make_mesh((n,), ("workers",), devices=devices[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,))

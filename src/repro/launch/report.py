@@ -1,0 +1,97 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report > artifacts/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+
+from repro.common.config import SHAPES
+from repro.configs import ARCH_IDS
+
+
+def load():
+    recs = {}
+    for f in glob.glob("artifacts/dryrun/*.json"):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(recs) -> str:
+    head = ("| arch | shape | dom | compute_s | memory_s | collective_s | "
+            "6ND/compiled | roofline_frac | coll bytes | HLO flops(raw) |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [head]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, "single"))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | | |")
+                continue
+            if r["status"] == "skip":
+                lines.append(f"| {arch} | {shape} | skip(long) — "
+                             f"{r['reason'][:40]}… | | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | | |")
+                continue
+            t = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {t['dominant']} | "
+                f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+                f"{t['collective_s']:.2e} | {t['useful_ratio']:.3f} | "
+                f"{t['roofline_fraction']:.3f} | "
+                f"{fmt_b(t['collective_bytes'])} | "
+                f"{fmt_b(r['cost_analysis']['flops_raw'])} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs) -> str:
+    head = ("| arch | shape | mesh | status | compile_s | arg bytes/dev | "
+            "temp bytes/dev | collectives |\n|---|---|---|---|---|---|---|---|")
+    lines = [head]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if r["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | "
+                                 f"{r['status']} | | | | |")
+                    continue
+                colls = ", ".join(f"{k.split('-')[-1][:7]}:{fmt_b(v)}"
+                                  for k, v in sorted(r["collectives"].items())
+                                  if v > 1e6)
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{r['compile_s']:.0f} | "
+                    f"{fmt_b(r['memory']['argument_bytes'])} | "
+                    f"{fmt_b(r['memory']['temp_bytes'])} | {colls or '-'} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    skip = sum(1 for r in recs.values() if r["status"] == "skip")
+    print(f"<!-- {ok} ok, {skip} skip, {len(recs)} cells -->\n")
+    print("## Roofline (single-pod 16x16, per global step)\n")
+    print(roofline_table(recs))
+    print("\n## Dry-run (both meshes)\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

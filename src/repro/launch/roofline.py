@@ -1,0 +1,390 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e-class constants
+from ``repro.common.config.HW``):
+
+  compute    = FLOPs            / (chips * 197e12)
+  memory     = HBM bytes        / (chips * 819e9)
+  collective = collective bytes / (chips * links * 50e9)
+
+Sources:
+  * collective bytes — parsed from the post-SPMD HLO text, **with while-loop
+    trip-count multipliers**: XLA's cost analysis (and the HLO text) contain
+    each scan body once; we reconstruct the loop nest (while_cond trip
+    constants + body call graph) and multiply. See ``hlo_collective_bytes``.
+  * FLOPs / HBM bytes — ``compiled.cost_analysis()`` raw values are reported,
+    but the roofline uses the ANALYTIC models below (cost analysis counts
+    scan bodies once — calibrated in EXPERIMENTS.md §Dry-run); the analytic
+    "compiled" model includes implementation overheads (masked attention
+    blocks computed then discarded, MoE dense-dispatch einsums, remat
+    recompute) so the MODEL_FLOPS/compiled ratio exposes the waste the perf
+    loop attacks.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+from repro.common.config import HW, SHAPES, ModelConfig
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+    "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[tok_dtype]
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """Split HLO text into named computations (scheduled-HLO layout:
+    ``%name (args) -> type {`` headers at column 0; ``ENTRY`` for main)."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line)
+            cur = m.group(1) if m else None
+            if cur:
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    out = {k: "\n".join(v) for k, v in comps.items()}
+    if entry:
+        out["__entry__"] = out[entry]
+    return out
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def _collectives_in(text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for line in text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[-1][:40]:
+            continue
+        op = m.group(1)
+        prefix = line[:m.start()]
+        shapes = _SHAPE_RE.findall(prefix)      # result type(s)
+        by = sum(_shape_bytes(t, d) for t, d in shapes)
+        if op == "reduce-scatter":
+            # result is the scattered piece; traffic ~ the full input buffer
+            operand = _SHAPE_RE.findall(line[m.end():])
+            if operand:
+                by = max(by, sum(_shape_bytes(t, d) for t, d in operand[:1]))
+        mult = 2 if op == "all-reduce" else 1    # ring all-reduce moves ~2x
+        out[op] = out.get(op, 0) + by * mult
+    return out
+
+
+def hlo_collective_bytes(hlo: str) -> Tuple[Dict[str, int], int]:
+    """Collective bytes with while-loop multipliers. Returns (per-op, total)."""
+    comps = _split_computations(hlo)
+    # loop nest: computation -> [(body_name, trip)]
+    children: Dict[str, list] = {}
+    for name, text in comps.items():
+        for cond, body in _WHILE_RE.findall(text):
+            trip = _trip_count(comps.get(cond, ""))
+            children.setdefault(name, []).append((body, trip))
+
+    totals: Dict[str, int] = {}
+
+    def visit(name: str, mult: int, seen):
+        if name in seen or name not in comps:
+            return
+        seen = seen | {name}
+        local = _collectives_in(comps[name])
+        for op, by in local.items():
+            totals[op] = totals.get(op, 0) + by * mult
+        for body, trip in children.get(name, []):
+            visit(body, mult * trip, seen)
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps), None)
+    if entry:
+        # entry text aliases a named comp; avoid double visiting via seen set
+        visit(entry, 1, frozenset())
+        for name, text in comps.items():
+            if name != entry and comps[name] is comps.get("__entry__"):
+                continue
+    # subtract nothing: bodies are only reachable through while edges
+    return totals, sum(totals.values())
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOP / byte models (per global step; fwd only unless train)
+
+def _blocked_pairs(s, kv, kind, window, qc=None, kc=1024):
+    """(q,k) pairs computed by the blocked-triangle schedule in
+    models/attention.py::_attend_blocked (mirrors its bounds exactly)."""
+    qc = qc or max(512, s // 16)
+    if s % qc:
+        qc = s
+    total = 0
+    for i in range(s // qc):
+        if kind == "bidir":
+            lo, hi = 0, kv
+        else:
+            hi = min(kv, (i + 1) * qc)
+            lo = 0
+            if kind == "local":
+                lo = max(0, (i * qc - window + 1) // kc * kc)
+        span = -(-(hi - lo) // kc) * kc if (hi - lo) % kc else (hi - lo)
+        total += qc * span
+    return total
+
+
+def _attn_flops(cfg, b, s, kv, causal=True, window=0, compiled=False):
+    """Score+AV flops. compiled=True mirrors the blocked implementation
+    (block-granular masking waste); compiled=False is the exact-mask floor."""
+    h, dh = cfg.n_heads, cfg.head_dim_
+    if cfg.mla:
+        dh = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        dv = cfg.mla.v_head_dim
+    else:
+        dv = dh
+    kind = "local" if window else ("causal" if causal else "bidir")
+    if compiled and s > 1 and s * kv > 1024 * 1024:
+        pairs = _blocked_pairs(s, kv, kind, window)
+    elif window:
+        pairs = s * min(kv, window)
+    elif causal and s > 1:
+        pairs = s * kv / 2
+    else:
+        pairs = s * kv
+    return 2 * b * pairs * h * (dh + dv)
+
+
+def _proj_flops(cfg, b, s):
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    if cfg.mla:
+        m = cfg.mla
+        per_tok = (d * m.q_lora_rank
+                   + m.q_lora_rank * h * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                   + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                   + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+                   + h * m.v_head_dim * d)
+    else:
+        per_tok = d * dh * (2 * h + 2 * k)
+    return 2 * b * s * per_tok
+
+
+def _mlp_flops(cfg, b, s, d_ff=None):
+    f = d_ff if d_ff is not None else cfg.d_ff
+    mats = 3 if cfg.gated_mlp else 2
+    return 2 * b * s * cfg.d_model * f * mats
+
+
+def _moe_flops(cfg, b, s, compiled: bool):
+    m = cfg.moe
+    t = b * s
+    mats = 3 if cfg.gated_mlp else 2
+    useful = 2 * t * m.top_k * cfg.d_model * m.d_ff_expert * mats
+    if m.n_shared:
+        useful += 2 * t * cfg.d_model * (m.d_ff_shared * m.n_shared) * mats
+    useful += 2 * t * cfg.d_model * m.n_experts          # router
+    if not compiled:
+        return useful
+    # grouped scatter dispatch: no dispatch matmuls; overhead = capacity
+    # padding (cf) on the routed expert GEMMs
+    routed = 2 * t * m.top_k * cfg.d_model * m.d_ff_expert * mats
+    return useful - routed + routed * m.capacity_factor
+
+
+def _ssd_flops(cfg, b, s):
+    ss = cfg.ssm
+    di = ss.expand * cfg.d_model
+    n, q = ss.d_state, ss.chunk
+    proj = 2 * b * s * cfg.d_model * (2 * di + 2 * n + di // ss.head_dim) \
+        + 2 * b * s * di * cfg.d_model
+    ssd = 2 * b * s * (q * n + q * di + 2 * di * n)
+    return proj + ssd
+
+
+def _mlstm_flops(cfg, b, s):
+    x = cfg.xlstm
+    inner = int(x.proj_factor_m * cfg.d_model)
+    dh = inner // cfg.n_heads
+    q = x.chunk
+    proj = 2 * b * s * cfg.d_model * 3 * inner + 2 * b * s * inner * dh * 3
+    cell = 2 * b * s * (2 * q * inner + 3 * inner * dh)
+    return proj + cell
+
+
+def _slstm_flops(cfg, b, s):
+    d = cfg.d_model
+    dh = d // cfg.n_heads
+    ffn = int(cfg.xlstm.proj_factor_s * d)
+    return 2 * b * s * (4 * d * d + 4 * d * dh + 3 * d * ffn)
+
+
+def analytic_flops(cfg: ModelConfig, shape_name: str,
+                   compiled: bool = True) -> float:
+    """Per-global-step FLOPs. compiled=True models what the implementation
+    actually executes (masked blocks, dense MoE dispatch, remat recompute);
+    compiled=False is the useful-work floor."""
+    sh = SHAPES[shape_name]
+    b = sh.global_batch
+    kind = sh.kind
+    s = 1 if kind == "decode" else sh.seq_len
+    kv = sh.seq_len
+    fam = cfg.family
+    
+    total = 2 * b * s * cfg.d_model * cfg.padded_vocab      # logits
+    if fam in ("dense", "vlm"):
+        pat = cfg.attn_pattern
+        for i in range(cfg.n_layers):
+            kind_i = pat[i % len(pat)]
+            win = cfg.local_window if kind_i == "local" else 0
+            total += _proj_flops(cfg, b, s)
+            total += _attn_flops(cfg, b, s, kv, window=win, compiled=compiled)
+            total += _mlp_flops(cfg, b, s)
+    elif fam == "moe":
+        m = cfg.moe
+        for i in range(cfg.n_layers):
+            total += _proj_flops(cfg, b, s)
+            total += _attn_flops(cfg, b, s, kv, compiled=compiled)
+            if i < m.first_dense_layers:
+                total += _mlp_flops(cfg, b, s, m.d_ff_dense)
+            else:
+                total += _moe_flops(cfg, b, s, compiled)
+    elif fam == "audio":
+        enc_s = cfg.encoder_seq if kind != "decode" else 0
+        if enc_s:
+            for _ in range(cfg.n_encoder_layers):
+                total += _proj_flops(cfg, b, enc_s)
+                total += _attn_flops(cfg, b, enc_s, enc_s, causal=False, compiled=compiled)
+                total += _mlp_flops(cfg, b, enc_s)
+        for _ in range(cfg.n_layers):
+            total += _proj_flops(cfg, b, s)
+            total += _attn_flops(cfg, b, s, kv, compiled=compiled)
+            total += _proj_flops(cfg, b, s)                 # cross proj
+            total += _attn_flops(cfg, b, s, cfg.encoder_seq, causal=False, compiled=compiled)
+            total += _mlp_flops(cfg, b, s)
+    elif fam == "ssm":
+        x = cfg.xlstm
+        n_super = cfg.n_layers // x.slstm_every
+        total += n_super * ((x.slstm_every - 1) * _mlstm_flops(cfg, b, s)
+                            + _slstm_flops(cfg, b, s))
+    elif fam == "hybrid":
+        k = cfg.shared_attn_every
+        n_attn = -(-cfg.n_layers // k)
+        total += cfg.n_layers * _ssd_flops(cfg, b, s)
+        total += n_attn * (_proj_flops(cfg, b, s)
+                           + _attn_flops(cfg, b, s, kv, compiled=compiled)
+                           + _mlp_flops(cfg, b, s))
+
+    if kind == "train":
+        mult = 3.0                                           # fwd + bwd
+        if compiled and cfg.remat_policy == "full":
+            mult = 4.0                                       # + recompute fwd
+        total *= mult
+    return float(total)
+
+
+def model_flops_6nd(cfg: ModelConfig, shape_name: str) -> float:
+    """The brief's MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D=tokens
+    processed by the step (decode: one token per sequence)."""
+    from repro.models.lm import count_params
+    sh = SHAPES[shape_name]
+    tokens = sh.global_batch * (1 if sh.kind == "decode" else sh.seq_len)
+    n = count_params(cfg, active_only=True)
+    mult = 6 if sh.kind == "train" else 2
+    return float(mult * n * tokens)
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape_name: str,
+                       n_chips: int) -> float:
+    """Per-chip-summed HBM traffic model (bytes, whole step, all chips).
+
+    train: params read 2x (fwd+bwd) + grads/opt state r/w (per accum: weights
+    re-read) ; activations r/w ~ 2 passes of the residual stream per layer.
+    decode: params + full cache read once per token; prefill: params once +
+    activations.
+    """
+    from repro.models.lm import count_params
+    sh = SHAPES[shape_name]
+    n = count_params(cfg)
+    pbytes = {"float32": 4, "bfloat16": 2}[cfg.param_dtype] * n
+    act_unit = sh.global_batch * sh.seq_len * cfg.d_model * 2
+    if sh.kind == "train":
+        accum = max(cfg.train_accum, 1)
+        opt = 2 * {"float32": 4, "bfloat16": 2}[cfg.adam_dtype] * n
+        passes = 3 if cfg.remat_policy == "none" else 4
+        return float(pbytes * (passes * accum + 2) + opt * 2
+                     + act_unit * 4 * cfg.n_layers)
+    if sh.kind == "prefill":
+        return float(pbytes + act_unit * 4 * cfg.n_layers)
+    # decode
+    cache = _cache_bytes(cfg, sh)
+    return float(pbytes + cache + sh.global_batch * cfg.d_model * 2
+                 * cfg.n_layers * 8)
+
+
+def _cache_bytes(cfg, sh):
+    b, s = sh.global_batch, sh.seq_len
+    if cfg.family == "ssm":
+        x = cfg.xlstm
+        inner = int(x.proj_factor_m * cfg.d_model)
+        dh = inner // cfg.n_heads
+        n_m = cfg.n_layers - cfg.n_layers // x.slstm_every
+        return b * (n_m * cfg.n_heads * (dh * dh + dh) * 4
+                    + (cfg.n_layers // x.slstm_every) * 4 * cfg.d_model * 4)
+    if cfg.family == "hybrid":
+        ss = cfg.ssm
+        di = ss.expand * cfg.d_model
+        n_attn = -(-cfg.n_layers // cfg.shared_attn_every)
+        return b * (cfg.n_layers * (di // ss.head_dim) * ss.head_dim
+                    * ss.d_state * 4
+                    + n_attn * s * cfg.n_kv_heads * cfg.head_dim_ * 2 * 2)
+    if cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        return b * s * cfg.n_layers * per_tok * 2
+    layers = cfg.n_layers + (cfg.n_encoder_layers if cfg.family == "audio"
+                             else 0)
+    return b * s * layers * cfg.n_kv_heads * cfg.head_dim_ * 2 * 2
+
+
+def roofline_terms(cfg, shape_name: str, n_chips: int,
+                   collective_bytes: float,
+                   flops: float | None = None,
+                   hbm_bytes: float | None = None) -> Dict[str, float]:
+    f = flops if flops is not None else analytic_flops(cfg, shape_name)
+    by = hbm_bytes if hbm_bytes is not None else analytic_hbm_bytes(
+        cfg, shape_name, n_chips)
+    t_c = f / (n_chips * HW.peak_flops)
+    t_m = by / (n_chips * HW.hbm_bw)
+    t_n = collective_bytes / (n_chips * HW.ici_links * HW.ici_bw)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])
+    mf = model_flops_6nd(cfg, shape_name)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom[0], "bound_s": dom[1],
+        "model_flops_6nd": mf, "flops": f, "hbm_bytes": by,
+        "collective_bytes": collective_bytes,
+        "useful_ratio": mf / f if f else 0.0,
+        "roofline_fraction": (mf / (n_chips * HW.peak_flops)) / dom[1]
+        if dom[1] else 0.0,
+    }

@@ -1,0 +1,94 @@
+"""Dry-run sweep driver: every (arch × shape × mesh) cell as a subprocess.
+
+Each cell runs in its own process (jax device-count env is per-process) with
+a timeout; results land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``
+and are skipped when already present (restartable — the same
+completed-work-bitmap discipline the battery checkpointing uses).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+
+from repro.common.config import SHAPES
+from repro.configs import ARCH_IDS
+
+ART = "artifacts/dryrun"
+
+
+def cell_path(arch, shape, mesh):
+    return f"{ART}/{arch}__{shape}__{mesh}.json"
+
+
+def run_one(arch, shape, mesh, timeout, force=False):
+    out = cell_path(arch, shape, mesh)
+    if not force and os.path.exists(out):
+        with open(out) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skip"):
+            return arch, shape, mesh, rec.get("status"), 0.0
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    try:
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh, "--out", out],
+            env=env, capture_output=True, text=True, timeout=timeout)
+        status = "ok" if p.returncode == 0 else "error"
+        if p.returncode != 0 and not os.path.exists(out):
+            os.makedirs(ART, exist_ok=True)
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "error",
+                           "error": p.stderr[-3000:]}, f, indent=1)
+    except subprocess.TimeoutExpired:
+        status = "timeout"
+        os.makedirs(ART, exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                       "status": "timeout", "timeout_s": timeout}, f)
+    return arch, shape, mesh, status, time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--archs", default=",".join(ARCH_IDS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = [(a, s, m)
+             for a in args.archs.split(",")
+             for s in args.shapes.split(",")
+             for m in args.meshes.split(",")]
+    # cheapest first: small models & decode shapes compile fastest
+    order = {"qwen2-1.5b": 0, "granite-moe-1b-a400m": 1, "whisper-small": 2,
+             "zamba2-1.2b": 3, "xlstm-1.3b": 4, "glm4-9b": 5,
+             "gemma2-27b": 6, "chameleon-34b": 7, "deepseek-v2-236b": 8,
+             "nemotron-4-340b": 9}
+    cells.sort(key=lambda c: (order.get(c[0], 99), c[1], c[2]))
+
+    os.makedirs(ART, exist_ok=True)
+    t0 = time.time()
+    done = 0
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futs = {ex.submit(run_one, a, s, m, args.timeout, args.force):
+                (a, s, m) for a, s, m in cells}
+        for fut in as_completed(futs):
+            arch, shape, mesh, status, dt = fut.result()
+            done += 1
+            print(f"[{done}/{len(cells)} {time.time()-t0:7.0f}s] "
+                  f"{status:8s} {arch} {shape} {mesh} ({dt:.0f}s)",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen2-1.5b
+--reduced --steps 50``.
+
+Full configs target the production mesh (see dryrun.py); ``--reduced`` runs
+the same loop on CPU with the smoke config. Checkpoints every
+``--ckpt-every`` steps (msgpack, atomic) and restart-exactly resumes: the
+synthetic data stream is keyed by step.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import io as ckpt_io
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.data.synthetic import batch_at
+from repro.models import lm
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def train(arch: str, steps: int, reduced: bool = True, seed: int = 0,
+          global_batch: int = 8, seq_len: int = 128,
+          ckpt_path: str | None = None, ckpt_every: int = 25,
+          log_every: int = 10, oc: OptConfig | None = None):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    oc = oc or OptConfig(lr=1e-3, warmup_steps=20, total_steps=steps)
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    state = {"params": params,
+             "opt": init_opt_state(params, jnp.dtype(cfg.adam_dtype))}
+    start_step = 0
+    if ckpt_path and ckpt_io.exists(ckpt_path):
+        state = ckpt_io.load_into(ckpt_path, state)
+        state = jax.tree_util.tree_map(jnp.asarray, state)
+        start_step = int(state["opt"]["step"])
+        print(f"resumed from {ckpt_path} at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, oc), donate_argnames=("state",))
+    frames_spec = ((global_batch, cfg.encoder_seq, cfg.d_model)
+                   if cfg.family == "audio" else None)
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        batch = batch_at(seed, step, global_batch, seq_len, cfg.vocab_size,
+                         frames_spec)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(step-start_step+1):.2f}s/step)",
+                  flush=True)
+        if ckpt_path and (step + 1) % ckpt_every == 0:
+            ckpt_io.save(ckpt_path, state)
+    if ckpt_path:
+        ckpt_io.save(ckpt_path, state)
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list(ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    _, losses = train(args.arch, args.steps, args.reduced,
+                      global_batch=args.batch, seq_len=args.seq,
+                      ckpt_path=args.ckpt)
+    print(f"first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,369 @@
+"""Attention: GQA (w/ local windows, softcaps, qk-norm, bias) and MLA.
+
+Two compute paths:
+  * dense path — materializes (S, T) scores; used for short sequences and
+    single-token decode.
+  * chunked path — lax.scan over KV chunks with an online softmax
+    ("flash-in-XLA"); used when kv_len exceeds ``CHUNK_THRESHOLD``. The Pallas
+    kernel in ``repro.kernels.flash_attention`` is the TPU-hardware twin of
+    this path (validated against the same oracle).
+
+Decode caches:
+  * GQA: k/v per layer, (B, S_max, K, dh).
+  * MLA: shared latent c_kv (B, S_max, r) + rope key (B, S_max, dr) — the
+    DeepSeek-V2 "absorbed" decode, cache is head-count independent.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constrain import constrain, seq_axis
+from repro.models.common import apply_rope, rope_angles, softcap
+from repro.models.params import P
+
+BLOCK_THRESHOLD = 1024 * 1024   # q_len*kv_len above this -> blocked path
+KV_CHUNK = 1024
+NEG_INF = -2.3819763e38  # ~min bf16; used additively for masks
+
+
+def _q_chunk(s: int) -> int:
+    """Adaptive q-chunk: 8-16 outer segments, floor 512."""
+    return max(512, s // 16)
+
+
+# ---------------------------------------------------------------------------
+# specs
+
+def spec_attention(cfg):
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    spec = {
+        "wq": P((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": P((d, k, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, k, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": P((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((h, dh), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = P((k, dh), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = P((k, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = P((dh,), ("head_dim",), init="zeros")
+        spec["k_norm"] = P((dh,), ("head_dim",), init="zeros")
+    return spec
+
+
+def spec_mla(cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dq, dkv = m.q_lora_rank, m.kv_lora_rank
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    return {
+        "w_dq": P((d, dq), ("embed", "q_lora")),
+        "q_norm": P((dq,), ("q_lora",), init="zeros"),
+        "w_uq": P((dq, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "w_dkv": P((d, dkv), ("embed", "kv_lora")),
+        "kv_norm": P((dkv,), ("kv_lora",), init="zeros"),
+        "w_uk": P((dkv, h, dn), ("kv_lora", "heads", "head_dim")),
+        "w_uv": P((dkv, h, dv), ("kv_lora", "heads", "head_dim")),
+        "w_kr": P((d, dr), ("embed", "head_dim")),
+        "wo": P((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# masking helpers
+
+PAD_POS = 2 ** 30  # sentinel position for padded keys (always masked)
+
+
+def _mask_bias(q_pos, k_pos, kind: str, window: int):
+    """Additive mask bias (q, k). kind: causal | local | bidir."""
+    if kind == "bidir":
+        ok = (k_pos < PAD_POS)[None, :] & jnp.ones(
+            (q_pos.shape[0], 1), bool)
+        return jnp.where(ok, 0.0, NEG_INF)
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = diff >= 0
+    if kind == "local":
+        ok = ok & (diff < window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _rmsnorm_vec(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# core softmax-attention over grouped heads
+
+def _attend_dense(q, k, v, bias, scale, cap):
+    """q: (B,S,K,g,dh) k,v: (B,T,K,dh) bias: (S,T) -> (B,S,K,g,dh)."""
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    scores = scores + bias[None, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", w, v)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, kind, window, scale, cap):
+    """Online-softmax scan over KV chunks. Shapes as in _attend_dense."""
+    b, s, kh, g, dh = q.shape
+    dv = v.shape[-1]
+    t = k.shape[1]
+    n_chunks = -(-t // KV_CHUNK)
+    pad = n_chunks * KV_CHUNK - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=PAD_POS)
+    kc = k.reshape(b, n_chunks, KV_CHUNK, kh, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, KV_CHUNK, kh, dv).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, KV_CHUNK)
+
+    m0 = jnp.full((b, kh, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, s, kh, g, dv), jnp.float32)
+
+    def body(carry, chunk):
+        m, l, acc = carry
+        kj, vj, pj = chunk
+        bias = _mask_bias(q_pos, pj, kind, window)              # (s, C)
+        scores = jnp.einsum("bskgd,bckd->bkgsc", q, kj,
+                            preferred_element_type=jnp.float32) * scale
+        scores = softcap(scores, cap) + bias[None, None, None]
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+            "bkgsc,bckd->bskgd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-37).transpose(0, 3, 1, 2)[..., None]
+    return out
+
+
+def _attend_blocked(qg, k, v, q_pos, k_pos, kind, window, scale, cap):
+    """Triangle block schedule: python loop over q chunks; per chunk an
+    online-softmax scan over ONLY the kv chunks that can be unmasked
+    (causal: lower-triangular bands; local: the window band; bidir: all).
+    This is the XLA twin of the Pallas flash kernel — block-bounded memory
+    and no fully-masked-block compute."""
+    b, s, kh, g, dh = qg.shape
+    t = k.shape[1]
+    qc = _q_chunk(s)
+    if s % qc:
+        qc = s
+    outs = []
+    # each q-chunk is rematerialized in the backward so only ONE chunk's
+    # inner-scan residuals are ever live (flash-style memory discipline;
+    # the Pallas kernel's custom VJP is the hardware twin of this)
+    chunk_fn = jax.checkpoint(
+        lambda q_i, k_i, v_i, p_i, kp_i: _attend_chunked(
+            q_i, k_i, v_i, p_i, kp_i, kind, window, scale, cap),
+        static_argnums=())
+    for i in range(s // qc):
+        q_i = qg[:, i * qc:(i + 1) * qc]
+        p_i = q_pos[i * qc:(i + 1) * qc]
+        if kind == "bidir":
+            lo, hi = 0, t
+        else:
+            hi = min(t, (i + 1) * qc)          # static causal upper bound
+            lo = 0
+            if kind == "local":
+                lo = max(0, (i * qc - window + 1) // KV_CHUNK * KV_CHUNK)
+        outs.append(chunk_fn(q_i, k[:, lo:hi], v[:, lo:hi], p_i,
+                             k_pos[lo:hi]))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def sdpa(q, k, v, q_pos, k_pos, kind, window, scale, cap):
+    """Dispatch dense vs blocked. q: (B,S,H,dq) k: (B,T,K,dq) v: (B,T,K,dv)."""
+    b, s, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, dh)
+    if s > 1 and s * k.shape[1] > BLOCK_THRESHOLD:
+        out = _attend_blocked(qg, k, v, q_pos, k_pos, kind, window, scale, cap)
+    else:
+        bias = _mask_bias(q_pos, k_pos, kind, window)
+        out = _attend_dense(qg, k, v, bias, scale, cap)
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+
+def _project_qkv(p, x, kv_x, cfg):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dke->bske", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dke->bske", src, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "q_norm" in p:
+        q = _rmsnorm_vec(q, p["q_norm"])
+        k = _rmsnorm_vec(k, p["k_norm"])
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv", None)
+    v = constrain(v, "batch", "seq", "kv", None)
+    return q, k, v
+
+
+def attention(p, x, cfg, *, kind="global", mode="causal", positions=None,
+              kv_x=None, kv_positions=None, return_kv=False):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, kv_x, cfg)
+    t = k.shape[1]
+    q_pos = positions if positions is not None else jnp.arange(s)
+    k_pos = kv_positions if kv_positions is not None else (
+        q_pos if kv_x is None else jnp.arange(t))
+    if cfg.rope and kv_x is None:
+        cos, sin = rope_angles(q_pos, cfg.head_dim_, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    scale = cfg.query_scale or cfg.head_dim_ ** -0.5
+    mask_kind = kind if mode == "causal" else "bidir"
+    if kind == "local" and mode != "causal":
+        mask_kind = "bidir"
+    out = sdpa(q, k, v, q_pos, k_pos, mask_kind, cfg.local_window, scale,
+               cfg.attn_softcap)
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = constrain(jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype)),
+                  "batch", seq_axis(), None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg, *, kind="global"):
+    """One-token decode. x: (B,1,D); cache: (B,S_max,K,dh); pos scalar int.
+
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, None, cfg)
+    if cfg.rope:
+        posv = jnp.full((1,), pos)
+        cos, sin = rope_angles(posv, cfg.head_dim_, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    s_max = cache_k.shape[1]
+    k_pos = jnp.arange(s_max)
+    valid = k_pos <= pos
+    if kind == "local":
+        valid = valid & (k_pos > pos - cfg.local_window)
+    scale = cfg.query_scale or cfg.head_dim_ ** -0.5
+    kh = cache_k.shape[2]
+    g = cfg.n_heads // kh
+    qg = q.reshape(b, 1, kh, g, cfg.head_dim_)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, cache_k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, cache_v.astype(q.dtype))
+    out = out.reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+def cross_attention_decode(p, x, cross_k, cross_v, cfg):
+    """Decode-time cross attention against a fixed encoder cache."""
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    t = cross_k.shape[1]
+    out = sdpa(q, cross_k.astype(q.dtype), cross_v.astype(q.dtype),
+               jnp.zeros((1,), jnp.int32), jnp.arange(t), "bidir",
+               cfg.local_window, cfg.head_dim_ ** -0.5, 0.0)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(x.dtype))
+    cq = _rmsnorm_vec(cq, p["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    m = cfg.mla
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv = _rmsnorm_vec(c_kv, p["kv_norm"])
+    k_rope = jnp.einsum("bsd,de->bse", x, p["w_kr"].astype(x.dtype))
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(p, x, cfg, *, positions=None, return_cache=False):
+    """Train/prefill MLA: materializes per-head K/V from the latent."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(s)
+    q_nope, q_rope = _mla_q(p, x, cfg, pos)
+    c_kv, k_rope = _mla_latent(p, x, cfg, pos)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, cfg.n_heads, m.qk_rope_head_dim))],
+        axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = sdpa(q, k, v, pos, pos, "causal", 0, scale, 0.0)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    if return_cache:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(p, x, cache_ckv, cache_kr, pos, cfg):
+    """Absorbed MLA decode: score/value computed in latent space.
+
+    cache_ckv: (B, S_max, r), cache_kr: (B, S_max, dr). Cache grows by one.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    posv = jnp.full((1,), pos)
+    q_nope, q_rope = _mla_q(p, x, cfg, posv)                     # (B,1,H,*)
+    c_kv, k_rope = _mla_latent(p, x, cfg, posv)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, k_rope.astype(cache_kr.dtype), pos, axis=1)
+    # absorb W_uk into q: (B,1,H,dn) @ (r,H,dn) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"].astype(x.dtype))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, cache_ckv.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshe,bte->bhst", q_rope, cache_kr.astype(x.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(cache_ckv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, cache_ckv.astype(x.dtype))
+    out = jnp.einsum("bshr,rhe->bshe", o_lat, p["w_uv"].astype(x.dtype))
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_ckv, cache_kr

@@ -1,0 +1,99 @@
+"""Shared model primitives: norms, activations, rope, dense helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import P
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+def rmsnorm(x, weight, eps=1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, weight, bias, eps=1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def norm_spec(d: int, kind: str = "rms"):
+    if kind == "rms":
+        return {"scale": P((d,), ("embed",), init="zeros")}
+    return {"scale": P((d,), ("embed",), init="ones"),
+            "bias": P((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(p, x, cfg, kind: str = "rms"):
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# activations
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "gelu_plain":
+        return lambda x: jax.nn.gelu(x, approximate=False)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim//2) fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D). cos/sin: (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    x32_1 = x1.astype(jnp.float32)
+    x32_2 = x2.astype(jnp.float32)
+    out1 = x32_1 * cos - x32_2 * sin
+    out2 = x32_2 * cos + x32_1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sinusoidal absolute positions (whisper stub)
+
+def sinusoid_pos(seq: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

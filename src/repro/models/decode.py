@@ -1,0 +1,360 @@
+"""Prefill + single-token decode for every architecture family.
+
+``prefill(params, tokens, cfg, max_seq)`` runs the full-sequence forward
+while building the decode cache (KV / MLA-latent / SSM states).
+``decode_step(params, cache, token, cfg)`` consumes and returns the cache —
+this is what ``serve_step`` lowers in the dry-run for decode shapes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import apply_norm, sinusoid_pos
+from repro.models.lm import (_lm_logits, _unit_structure, init_cache)
+from repro.models.mlp import mlp
+
+
+def _pad_seq(x, max_seq):
+    if x.shape[1] == max_seq:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, max_seq - x.shape[1])
+    return jnp.pad(x, pad)
+
+
+def _embed(params, tokens, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.arch_id.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    return x
+
+
+def _block_prefill(p, x, cfg, kind, max_seq, use_mla=False, use_moe=False):
+    h = apply_norm(p["pre_attn"], x, cfg)
+    if use_mla:
+        h, (ckv, kr) = attn_mod.mla_attention(p["attn"], h, cfg,
+                                              return_cache=True)
+        kv = {"ckv": _pad_seq(ckv, max_seq), "kr": _pad_seq(kr, max_seq)}
+    else:
+        h, (k, v) = attn_mod.attention(p["attn"], h, cfg, kind=kind,
+                                       return_kv=True)
+        kv = {"k": _pad_seq(k, max_seq), "v": _pad_seq(v, max_seq)}
+    if "post_attn" in p:
+        h = apply_norm(p["post_attn"], h, cfg)
+    x = x + h
+    h = apply_norm(p["pre_mlp"], x, cfg)
+    if use_moe:
+        h, _ = moe_mod.moe(p["mlp"], h, cfg)
+    else:
+        h = mlp(p["mlp"], h, cfg)
+    if "post_mlp" in p:
+        h = apply_norm(p["post_mlp"], h, cfg)
+    return x + h, kv
+
+
+def _block_decode(p, x, kv, pos, cfg, kind, use_mla=False, use_moe=False):
+    h = apply_norm(p["pre_attn"], x, cfg)
+    if use_mla:
+        h, ckv, kr = attn_mod.mla_decode(p["attn"], h, kv["ckv"], kv["kr"],
+                                         pos, cfg)
+        kv = {"ckv": ckv, "kr": kr}
+    else:
+        h, ck, cv = attn_mod.attention_decode(p["attn"], h, kv["k"], kv["v"],
+                                              pos, cfg, kind=kind)
+        kv = {"k": ck, "v": cv}
+    if "post_attn" in p:
+        h = apply_norm(p["post_attn"], h, cfg)
+    x = x + h
+    h = apply_norm(p["pre_mlp"], x, cfg)
+    if use_moe:
+        h, _ = moe_mod.moe(p["mlp"], h, cfg)
+    else:
+        h = mlp(p["mlp"], h, cfg)
+    if "post_mlp" in p:
+        h = apply_norm(p["post_mlp"], h, cfg)
+    return x + h, kv
+
+
+# ---------------------------------------------------------------------------
+# prefill
+
+def prefill(params, tokens, cfg, max_seq=None, frames=None):
+    """Returns (last_logits (B, V_padded), cache)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = _embed(params, tokens, cfg)
+    fam = cfg.family
+    cache: Dict[str, Any] = {"pos": jnp.asarray(s, jnp.int32)}
+
+    if fam in ("dense", "vlm"):
+        n_units, pat = _unit_structure(cfg)
+        kinds = pat if len(pat) > 1 else ("blk",)
+        pat_kinds = pat if len(pat) > 1 else ("global",)
+
+        def body(h, unit_p):
+            ys = {}
+            for key, kind in zip(kinds, pat_kinds):
+                h, kv = _block_prefill(unit_p[key], h, cfg, kind, max_seq)
+                ys[key] = kv
+            return h, ys
+
+        x, units_cache = jax.lax.scan(body, x, params["units"])
+        cache["units"] = units_cache
+    elif fam == "moe":
+        use_mla = cfg.mla is not None
+        if "head_blocks" in params:
+            def hbody(h, blk):
+                h, kv = _block_prefill(blk, h, cfg, "global", max_seq,
+                                       use_mla=use_mla, use_moe=False)
+                return h, kv
+            x, head_cache = jax.lax.scan(hbody, x, params["head_blocks"])
+            cache["head"] = head_cache
+
+        def body(h, unit_p):
+            h, kv = _block_prefill(unit_p["blk"], h, cfg, "global", max_seq,
+                                   use_mla=use_mla, use_moe=True)
+            return h, kv
+
+        x, units_cache = jax.lax.scan(body, x, params["units"])
+        cache["units"] = units_cache
+    elif fam == "audio":
+        x, cache = _whisper_prefill(params, x, tokens, frames, cfg, max_seq,
+                                    cache)
+    elif fam == "ssm":
+        def body(h, unit_p):
+            def inner(h2, mp):
+                y, st = xlstm_mod.mlstm(mp, h2, cfg, return_state=True)
+                return h2 + y, st
+            h, m_states = jax.lax.scan(inner, h, unit_p["mlstm"])
+            y, s_state = xlstm_mod.slstm(unit_p["slstm"], h, cfg,
+                                         return_state=True)
+            return h + y, {"mlstm": m_states, "slstm": s_state}
+
+        x, states = jax.lax.scan(body, x, params["units"])
+        cache["mlstm"] = states["mlstm"]
+        cache["slstm"] = states["slstm"]
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+        s_cfg = cfg.ssm
+        d_inner, n_heads, conv_dim = ssm_mod._dims(cfg)
+        attn_caches = []
+
+        def m_zero():
+            return (jnp.zeros((b, s_cfg.d_conv - 1, conv_dim), x.dtype),
+                    jnp.zeros((b, n_heads, s_cfg.head_dim, s_cfg.d_state),
+                              jnp.float32))
+
+        def body(h, unit_p):
+            h, kv = _block_prefill(shared, h, cfg, "global", max_seq)
+
+            def inner(h2, mp):
+                cs, ss = m_zero()
+                y, conv_f, ssm_f = ssm_mod.mamba2(mp, h2, cfg, cs, ss)
+                return h2 + y, {"conv": conv_f, "ssm": ssm_f}
+
+            h, m_states = jax.lax.scan(inner, h, unit_p["mamba"])
+            return h, (kv, m_states)
+
+        x, (attn_kv, mamba_states) = jax.lax.scan(body, x, params["units"])
+        cache["mamba"] = mamba_states
+        if "tail" in params:
+            h, kv_tail = _block_prefill(shared, x, cfg, "global", max_seq)
+
+            def inner(h2, mp):
+                cs, ss = m_zero()
+                y, conv_f, ssm_f = ssm_mod.mamba2(mp, h2, cfg, cs, ss)
+                return h2 + y, {"conv": conv_f, "ssm": ssm_f}
+
+            x, tail_states = jax.lax.scan(inner, h, params["tail"])
+            cache["tail"] = tail_states
+            attn_k = jnp.concatenate([attn_kv["k"], kv_tail["k"][None]], 0)
+            attn_v = jnp.concatenate([attn_kv["v"], kv_tail["v"][None]], 0)
+        else:
+            attn_k, attn_v = attn_kv["k"], attn_kv["v"]
+        cache["attn"] = {"k": attn_k, "v": attn_v}
+    else:
+        raise ValueError(fam)
+
+    xl = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    logits = _lm_logits(params, xl, cfg)[:, 0]
+    return logits, cache
+
+
+def _whisper_prefill(params, x, tokens, frames, cfg, max_seq, cache):
+    cdt = x.dtype
+    b, s = tokens.shape
+    d = cfg.d_model
+    enc = frames.astype(cdt) + sinusoid_pos(frames.shape[1], d, cdt)[None]
+
+    def enc_body(h, blk):
+        a = apply_norm(blk["pre_attn"], h, cfg)
+        h = h + attn_mod.attention(blk["attn"], a, cfg, mode="bidir")
+        m = apply_norm(blk["pre_mlp"], h, cfg)
+        return h + mlp(blk["mlp"], m, cfg), None
+
+    enc, _ = jax.lax.scan(enc_body, enc, params["encoder"])
+    enc = apply_norm(params["enc_final_norm"], enc, cfg)
+
+    x = x + params["pos_embed"][:s].astype(cdt)[None]
+
+    def dec_body(h, blk):
+        a = apply_norm(blk["pre_attn"], h, cfg)
+        a, (k, v) = attn_mod.attention(blk["attn"], a, cfg, mode="causal",
+                                       return_kv=True)
+        h = h + a
+        c = apply_norm(blk["pre_cross"], h, cfg)
+        c, (xk, xv) = attn_mod.attention(blk["cross"], c, cfg, mode="bidir",
+                                         kv_x=enc, return_kv=True)
+        h = h + c
+        m = apply_norm(blk["pre_mlp"], h, cfg)
+        return h + mlp(blk["mlp"], m, cfg), {
+            "k": _pad_seq(k, max_seq), "v": _pad_seq(v, max_seq),
+            "xk": xk, "xv": xv}
+
+    x, ys = jax.lax.scan(dec_body, x, params["units"])
+    cache["units"] = {"k": ys["k"], "v": ys["v"]}
+    cache["cross"] = {"k": ys["xk"], "v": ys["xv"]}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+def decode_step(params, cache, token, cfg):
+    """token: (B, 1) int32. Returns (logits (B, V_padded), new cache)."""
+    pos = cache["pos"]
+    x = _embed(params, token, cfg)
+    fam = cfg.family
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    if fam in ("dense", "vlm"):
+        n_units, pat = _unit_structure(cfg)
+        kinds = pat if len(pat) > 1 else ("blk",)
+        pat_kinds = pat if len(pat) > 1 else ("global",)
+
+        def body(h, inp):
+            unit_p, unit_kv = inp
+            ys = {}
+            for key, kind in zip(kinds, pat_kinds):
+                h, kv = _block_decode(unit_p[key], h, unit_kv[key], pos, cfg,
+                                      kind)
+                ys[key] = kv
+            return h, ys
+
+        x, units_cache = jax.lax.scan(body, x, (params["units"],
+                                                cache["units"]))
+        new_cache["units"] = units_cache
+    elif fam == "moe":
+        use_mla = cfg.mla is not None
+        if "head_blocks" in params:
+            def hbody(h, inp):
+                blk, kv = inp
+                h, kv = _block_decode(blk, h, kv, pos, cfg, "global",
+                                      use_mla=use_mla)
+                return h, kv
+            x, head_cache = jax.lax.scan(hbody, x, (params["head_blocks"],
+                                                    cache["head"]))
+            new_cache["head"] = head_cache
+
+        def body(h, inp):
+            unit_p, kv = inp
+            h, kv = _block_decode(unit_p["blk"], h, kv, pos, cfg, "global",
+                                  use_mla=use_mla, use_moe=True)
+            return h, kv
+
+        x, units_cache = jax.lax.scan(body, x, (params["units"],
+                                                cache["units"]))
+        new_cache["units"] = units_cache
+    elif fam == "audio":
+        x = x + params["pos_embed"][pos][None, None].astype(x.dtype)
+
+        def body(h, inp):
+            blk, k, v, xk, xv = inp
+            a = apply_norm(blk["pre_attn"], h, cfg)
+            a, k2, v2 = attn_mod.attention_decode(blk["attn"], a, k, v, pos,
+                                                  cfg)
+            h = h + a
+            c = apply_norm(blk["pre_cross"], h, cfg)
+            h = h + attn_mod.cross_attention_decode(blk["cross"], c, xk, xv,
+                                                    cfg)
+            m = apply_norm(blk["pre_mlp"], h, cfg)
+            return h + mlp(blk["mlp"], m, cfg), {"k": k2, "v": v2}
+
+        x, ys = jax.lax.scan(body, x, (params["units"], cache["units"]["k"],
+                                       cache["units"]["v"],
+                                       cache["cross"]["k"],
+                                       cache["cross"]["v"]))
+        new_cache["units"] = ys
+        new_cache["cross"] = cache["cross"]
+    elif fam == "ssm":
+        def body(h, inp):
+            unit_p, m_st, s_st = inp
+
+            def inner(h2, inp2):
+                mp, st = inp2
+                y, st2 = xlstm_mod.mlstm_decode(mp, h2, st, cfg)
+                return h2 + y, st2
+
+            h, m_new = jax.lax.scan(inner, h, (unit_p["mlstm"], m_st))
+            y, s_new = xlstm_mod.slstm_decode(unit_p["slstm"], h, s_st, cfg)
+            return h + y, {"m": m_new, "s": s_new}
+
+        x, states = jax.lax.scan(body, x, (params["units"], cache["mlstm"],
+                                           cache["slstm"]))
+        new_cache["mlstm"] = states["m"]
+        new_cache["slstm"] = states["s"]
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+        n_full = cache["mamba"]["ssm"].shape[0]
+        ak, av = cache["attn"]["k"], cache["attn"]["v"]
+
+        def body(h, inp):
+            unit_p, kv, m_st = inp
+            h, kv2 = _block_decode(shared, h, kv, pos, cfg, "global")
+
+            def inner(h2, inp2):
+                mp, st = inp2
+                y, conv2, ssm2 = ssm_mod.mamba2_decode(mp, h2, st["conv"],
+                                                       st["ssm"], cfg)
+                return h2 + y, {"conv": conv2, "ssm": ssm2}
+
+            h, m_new = jax.lax.scan(inner, h, (unit_p["mamba"], m_st))
+            return h, (kv2, m_new)
+
+        x, (kv_new, m_new) = jax.lax.scan(
+            body, x, (params["units"],
+                      {"k": ak[:n_full], "v": av[:n_full]}, cache["mamba"]))
+        new_cache["mamba"] = m_new
+        if "tail" in params:
+            h, kv_tail = _block_decode(
+                shared, x, {"k": ak[n_full], "v": av[n_full]}, pos, cfg,
+                "global")
+
+            def inner(h2, inp2):
+                mp, st = inp2
+                y, conv2, ssm2 = ssm_mod.mamba2_decode(mp, h2, st["conv"],
+                                                       st["ssm"], cfg)
+                return h2 + y, {"conv": conv2, "ssm": ssm2}
+
+            x, tail_new = jax.lax.scan(inner, h, (params["tail"],
+                                                  cache["tail"]))
+            new_cache["tail"] = tail_new
+            new_cache["attn"] = {
+                "k": jnp.concatenate([kv_new["k"], kv_tail["k"][None]], 0),
+                "v": jnp.concatenate([kv_new["v"], kv_tail["v"][None]], 0)}
+        else:
+            new_cache["attn"] = kv_new
+    else:
+        raise ValueError(fam)
+
+    xl = apply_norm(params["final_norm"], x, cfg)
+    logits = _lm_logits(params, xl, cfg)[:, 0]
+    return logits, new_cache

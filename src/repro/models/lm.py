@@ -1,0 +1,482 @@
+"""Model assembly for all assigned architectures.
+
+Public surface:
+  model_spec(cfg)                 -> param Spec tree (shapes + logical axes)
+  init_params(cfg, key)           -> materialized params
+  abstract_params(cfg)            -> ShapeDtypeStruct tree (dry-run, no alloc)
+  forward(params, tokens, cfg, frames=None) -> logits (B, S, V_padded)
+  loss_fn(params, batch, cfg)     -> scalar loss (CE + MoE aux)
+  init_cache(cfg, batch, max_seq) -> decode cache pytree
+  prefill(params, tokens, cfg)    -> (last_logits, cache)
+  decode_step(params, cache, token, cfg) -> (logits, cache)
+  count_params(cfg, active_only=False) -> int   (shape-only, no jax compute)
+
+Layer stacking: weights carry a leading unit dim and are consumed by
+``lax.scan`` (optionally nested scan-of-scan via ``cfg.scan_group`` for
+hierarchical remat). Heterogeneous per-arch structure (gemma2 local/global
+pairs, deepseek leading dense layer, xlstm superblocks, zamba2 shared-attn
+groups) is expressed in the *unit* definition, keeping every scan uniform.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.constrain import constrain, seq_axis
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import apply_norm, norm_spec, sinusoid_pos
+from repro.models.mlp import mlp, spec_mlp
+from repro.models.params import (P, axes_from_spec, count_spec_params,
+                                 init_from_spec, shapes_from_spec, stack_spec)
+
+WHISPER_MAX_POS = 32768
+
+
+# ---------------------------------------------------------------------------
+# block specs
+
+def _spec_attn_block(cfg, use_moe: bool, d_ff=None, use_mla=False):
+    spec = {
+        "pre_attn": norm_spec(cfg.d_model),
+        "attn": attn_mod.spec_mla(cfg) if use_mla else attn_mod.spec_attention(cfg),
+        "pre_mlp": norm_spec(cfg.d_model),
+        "mlp": moe_mod.spec_moe(cfg) if use_moe else spec_mlp(cfg, d_ff),
+    }
+    if cfg.post_block_norm:
+        spec["post_attn"] = norm_spec(cfg.d_model)
+        spec["post_mlp"] = norm_spec(cfg.d_model)
+    return spec
+
+
+def _unit_structure(cfg):
+    """Returns (n_units, unit_kinds) for the homogeneous scan over units."""
+    pat = cfg.attn_pattern
+    assert cfg.n_layers % len(pat) == 0
+    return cfg.n_layers // len(pat), pat
+
+
+def model_spec(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    spec: Dict[str, Any] = {
+        "embed": P((cfg.padded_vocab, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = P((d, cfg.padded_vocab), ("embed", "vocab"))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        n_units, pat = _unit_structure(cfg)
+        unit = {k: _spec_attn_block(cfg, use_moe=False)
+                for k in (pat if len(pat) > 1 else ("blk",))}
+        spec["units"] = stack_spec(unit, n_units)
+    elif fam == "moe":
+        use_mla = cfg.mla is not None
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_dense_layers
+        if m.first_dense_layers:
+            spec["head_blocks"] = stack_spec(
+                _spec_attn_block(cfg, use_moe=False, d_ff=m.d_ff_dense,
+                                 use_mla=use_mla), m.first_dense_layers)
+        spec["units"] = stack_spec(
+            {"blk": _spec_attn_block(cfg, use_moe=True, use_mla=use_mla)}, n_moe)
+    elif fam == "audio":
+        enc_block = {
+            "pre_attn": norm_spec(d, "ln"),
+            "attn": attn_mod.spec_attention(cfg),
+            "pre_mlp": norm_spec(d, "ln"),
+            "mlp": spec_mlp(cfg),
+        }
+        dec_block = {
+            "pre_attn": norm_spec(d, "ln"),
+            "attn": attn_mod.spec_attention(cfg),
+            "pre_cross": norm_spec(d, "ln"),
+            "cross": attn_mod.spec_attention(cfg),
+            "pre_mlp": norm_spec(d, "ln"),
+            "mlp": spec_mlp(cfg),
+        }
+        spec["encoder"] = stack_spec(enc_block, cfg.n_encoder_layers)
+        spec["units"] = stack_spec(dec_block, cfg.n_layers)
+        spec["enc_final_norm"] = norm_spec(d, "ln")
+        spec["final_norm"] = norm_spec(d, "ln")
+        spec["pos_embed"] = P((WHISPER_MAX_POS, d), (None, "embed"), scale=0.01)
+    elif fam == "ssm":                                            # xlstm
+        x = cfg.xlstm
+        n_super = cfg.n_layers // x.slstm_every
+        unit = {
+            "mlstm": stack_spec(xlstm_mod.spec_mlstm(cfg), x.slstm_every - 1,
+                                "inner_layers"),
+            "slstm": xlstm_mod.spec_slstm(cfg),
+        }
+        spec["units"] = stack_spec(unit, n_super)
+    elif fam == "hybrid":                                         # zamba2
+        k = cfg.shared_attn_every
+        n_full = cfg.n_layers // k                                # full groups
+        tail = cfg.n_layers - n_full * k
+        spec["shared_block"] = _spec_attn_block(cfg, use_moe=False)
+        spec["units"] = stack_spec(
+            {"mamba": stack_spec(ssm_mod.spec_mamba2(cfg), k, "inner_layers")},
+            n_full)
+        if tail:
+            spec["tail"] = stack_spec(ssm_mod.spec_mamba2(cfg), tail)
+    else:
+        raise ValueError(fam)
+    return spec
+
+
+def init_params(cfg, key):
+    return init_from_spec(model_spec(cfg), key, _pdtype(cfg))
+
+
+def abstract_params(cfg):
+    return shapes_from_spec(model_spec(cfg), _pdtype(cfg))
+
+
+def param_axes(cfg):
+    return axes_from_spec(model_spec(cfg))
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    spec = model_spec(cfg)
+    if not active_only or cfg.moe is None:
+        return count_spec_params(spec)
+    total = 0
+    leaves = jax.tree_util.tree_leaves(spec, is_leaf=lambda x: isinstance(x, P))
+    frac = (cfg.moe.top_k / cfg.moe.n_experts) if cfg.moe.n_experts else 1.0
+    for p in leaves:
+        n = int(np.prod(p.shape))
+        if "experts" in p.axes:
+            n = int(n * frac)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+
+def _apply_attn_block(p, x, cfg, kind="global", mode="causal", use_mla=False,
+                      use_moe=False, positions=None):
+    x = constrain(x, "batch", seq_axis(), None)
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["pre_attn"], x, cfg)
+    if use_mla:
+        h = attn_mod.mla_attention(p["attn"], h, cfg, positions=positions)
+    else:
+        h = attn_mod.attention(p["attn"], h, cfg, kind=kind, mode=mode,
+                               positions=positions)
+    if "post_attn" in p:
+        h = apply_norm(p["post_attn"], h, cfg)
+    x = x + h
+    h = apply_norm(p["pre_mlp"], x, cfg)
+    if use_moe:
+        h, aux = moe_mod.moe(p["mlp"], h, cfg)
+    else:
+        h = mlp(p["mlp"], h, cfg)
+    if "post_mlp" in p:
+        h = apply_norm(p["post_mlp"], h, cfg)
+    return x + h, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def _scan_units(body, x0, stacked, cfg):
+    """Scan over units with remat; optional nested scan-of-scan grouping."""
+    body_r = _remat(body, cfg)
+    n_units = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    g = cfg.scan_group
+    if g and n_units % g == 0 and n_units > g:
+        outer = n_units // g
+        regrouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((outer, g) + a.shape[1:]), stacked)
+
+        def outer_body(carry, group_params):
+            return jax.lax.scan(body_r, carry, group_params)
+
+        return jax.lax.scan(_remat(outer_body, cfg), x0, regrouped)
+    return jax.lax.scan(body_r, x0, stacked)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / full-sequence)
+
+def forward_hidden(params, tokens, cfg, frames=None):
+    """tokens: (B, S) int32 -> (final-normed hidden (B, S, D), aux loss)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    emb = params["embed"]
+    x = constrain(emb[tokens].astype(cdt), "batch", seq_axis(), None)
+    if cfg.arch_id.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        n_units, pat = _unit_structure(cfg)
+        kinds = pat if len(pat) > 1 else ("blk",)
+        pat_kinds = pat if len(pat) > 1 else ("global",)
+
+        def body(carry, unit_p):
+            h, aux = carry
+            for key, kind in zip(kinds, pat_kinds):
+                h, a = _apply_attn_block(unit_p[key], h, cfg, kind=kind)
+                aux = aux + a
+            return (h, aux), None
+
+        (x, aux_total), _ = _scan_units(body, (x, aux_total),
+                                        params["units"], cfg)
+    elif fam == "moe":
+        use_mla = cfg.mla is not None
+        if "head_blocks" in params:
+            def dense_body(carry, blk):
+                h, aux = carry
+                h, a = _apply_attn_block(blk, h, cfg, use_mla=use_mla,
+                                         use_moe=False)
+                return (h, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(
+                _remat(dense_body, cfg), (x, aux_total), params["head_blocks"])
+
+        def body(carry, unit_p):
+            h, aux = carry
+            h, a = _apply_attn_block(unit_p["blk"], h, cfg, use_mla=use_mla,
+                                     use_moe=True)
+            return (h, aux + a), None
+
+        (x, aux_total), _ = _scan_units(body, (x, aux_total),
+                                        params["units"], cfg)
+    elif fam == "audio":
+        x, aux_total = _whisper_forward(params, x, tokens, frames, cfg)
+    elif fam == "ssm":
+        def body(carry, unit_p):
+            h, aux = carry
+
+            def inner(h2, mp):
+                return h2 + xlstm_mod.mlstm(mp, h2, cfg), None
+
+            h, _ = jax.lax.scan(_remat(inner, cfg), h, unit_p["mlstm"])
+            h = h + xlstm_mod.slstm(unit_p["slstm"], h, cfg)
+            return (h, aux), None
+
+        (x, aux_total), _ = _scan_units(body, (x, aux_total),
+                                        params["units"], cfg)
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+
+        def body(carry, unit_p):
+            h, aux = carry
+            h, a = _apply_attn_block(shared, h, cfg)
+
+            def inner(h2, mp):
+                return h2 + ssm_mod.mamba2(mp, h2, cfg), None
+
+            h, _ = jax.lax.scan(_remat(inner, cfg), h, unit_p["mamba"])
+            return (h, aux + a), None
+
+        (x, aux_total), _ = _scan_units(body, (x, aux_total),
+                                        params["units"], cfg)
+        if "tail" in params:
+            h, a = _apply_attn_block(shared, x, cfg)
+            def inner(h2, mp):
+                return h2 + ssm_mod.mamba2(mp, h2, cfg), None
+            x, _ = jax.lax.scan(_remat(inner, cfg), h, params["tail"])
+            aux_total = aux_total + a
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux_total
+
+
+def forward(params, tokens, cfg, frames=None):
+    """tokens -> (logits (B, S, V_padded), aux). Materializes full logits —
+    use only for small configs/tests; the train path uses the fused chunked
+    cross-entropy in ``loss_fn``."""
+    x, aux = forward_hidden(params, tokens, cfg, frames=frames)
+    return _lm_logits(params, x, cfg), aux
+
+
+def _lm_logits(params, x, cfg):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+def _whisper_forward(params, x, tokens, frames, cfg):
+    cdt = x.dtype
+    b, s, d = x.shape
+    enc = frames.astype(cdt) + sinusoid_pos(frames.shape[1], d, cdt)[None]
+
+    def enc_body(h, blk):
+        a = apply_norm(blk["pre_attn"], h, cfg)
+        h = h + attn_mod.attention(blk["attn"], a, cfg, mode="bidir")
+        m = apply_norm(blk["pre_mlp"], h, cfg)
+        return h + mlp(blk["mlp"], m, cfg), None
+
+    enc, _ = jax.lax.scan(_remat(enc_body, cfg), enc, params["encoder"])
+    enc = apply_norm(params["enc_final_norm"], enc, cfg)
+
+    x = x + params["pos_embed"][:s].astype(cdt)[None]
+
+    def dec_body(h, blk):
+        a = apply_norm(blk["pre_attn"], h, cfg)
+        h = h + attn_mod.attention(blk["attn"], a, cfg, mode="causal")
+        c = apply_norm(blk["pre_cross"], h, cfg)
+        h = h + attn_mod.attention(blk["cross"], c, cfg, mode="bidir", kv_x=enc)
+        m = apply_norm(blk["pre_mlp"], h, cfg)
+        return h + mlp(blk["mlp"], m, cfg), None
+
+    x, _ = jax.lax.scan(_remat(dec_body, cfg), x, params["units"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# loss
+
+LOSS_CHUNK = 512
+
+
+def _ce_chunk(params, x_c, labels_c, cfg):
+    """Cross-entropy for one sequence chunk, fused with the vocab projection.
+
+    Never materializes (B, S, V): per chunk the live set is (B, chunk, V/TP)
+    and the backward recomputes the chunk logits (jax.checkpoint at call
+    site). Gold logits are extracted with a sharded mask-sum instead of
+    take_along_axis (which would all-gather the vocab-sharded logits).
+    """
+    logits = constrain(_lm_logits(params, x_c, cfg).astype(jnp.float32),
+                       "batch", "seq", "vocab")
+    v = cfg.vocab_size
+    if cfg.padded_vocab != v:
+        neg = jnp.asarray(attn_mod.NEG_INF, jnp.float32)
+        pad_mask = jnp.arange(cfg.padded_vocab) >= v
+        logits = jnp.where(pad_mask[None, None, :], neg, logits)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == labels_c[..., None], logits, 0.0),
+                   axis=-1)
+    return jnp.sum(lse - gold)
+
+
+def loss_fn(params, batch, cfg):
+    x, aux = forward_hidden(params, batch["tokens"], cfg,
+                            frames=batch.get("frames"))
+    labels = batch["labels"]
+    b, s, d = x.shape
+    ck = min(LOSS_CHUNK, s)
+    if s % ck:
+        ck = s
+    n_chunks = s // ck
+    chunk_fn = jax.checkpoint(lambda xc, lc: _ce_chunk(params, xc, lc, cfg))
+    if n_chunks == 1:
+        total = chunk_fn(x, labels)
+    else:
+        xs = (x.reshape(b, n_chunks, ck, d).transpose(1, 0, 2, 3),
+              labels.reshape(b, n_chunks, ck).transpose(1, 0, 2))
+
+        def body(acc, inp):
+            xc, lc = inp
+            return acc + chunk_fn(xc, lc), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    ce = total / (b * s)
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Build the decode cache pytree (zeros; prefill fills it)."""
+    cdt = dtype or jnp.dtype(cfg.compute_dtype)
+    fam = cfg.family
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    dh, kh = cfg.head_dim_, cfg.n_kv_heads
+    if fam in ("dense", "vlm"):
+        n_units, pat = _unit_structure(cfg)
+        kinds = pat if len(pat) > 1 else ("blk",)
+        cache["units"] = {
+            k: {"k": jnp.zeros((n_units, batch, max_seq, kh, dh), cdt),
+                "v": jnp.zeros((n_units, batch, max_seq, kh, dh), cdt)}
+            for k in kinds}
+    elif fam == "moe":
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_dense_layers
+        if cfg.mla is not None:
+            r, dr = cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim
+            if m.first_dense_layers:
+                cache["head"] = {
+                    "ckv": jnp.zeros((m.first_dense_layers, batch, max_seq, r), cdt),
+                    "kr": jnp.zeros((m.first_dense_layers, batch, max_seq, dr), cdt)}
+            cache["units"] = {
+                "ckv": jnp.zeros((n_moe, batch, max_seq, r), cdt),
+                "kr": jnp.zeros((n_moe, batch, max_seq, dr), cdt)}
+        else:
+            cache["units"] = {
+                "k": jnp.zeros((n_moe, batch, max_seq, kh, dh), cdt),
+                "v": jnp.zeros((n_moe, batch, max_seq, kh, dh), cdt)}
+    elif fam == "audio":
+        L = cfg.n_layers
+        cache["units"] = {
+            "k": jnp.zeros((L, batch, max_seq, kh, dh), cdt),
+            "v": jnp.zeros((L, batch, max_seq, kh, dh), cdt)}
+        cache["cross"] = {
+            "k": jnp.zeros((L, batch, cfg.encoder_seq, kh, dh), cdt),
+            "v": jnp.zeros((L, batch, cfg.encoder_seq, kh, dh), cdt)}
+    elif fam == "ssm":
+        x = cfg.xlstm
+        n_super = cfg.n_layers // x.slstm_every
+        inner, heads, mdh = xlstm_mod._mdims(cfg)
+        nm = x.slstm_every - 1
+        cache["mlstm"] = {
+            "c": jnp.zeros((n_super, nm, batch, heads, mdh, mdh), jnp.float32),
+            "n": jnp.zeros((n_super, nm, batch, heads, mdh), jnp.float32),
+            "m": jnp.full((n_super, nm, batch, heads), -1e30, jnp.float32),
+            "conv": jnp.zeros((n_super, nm, batch, x.conv_width - 1, inner), cdt)}
+        d = cfg.d_model
+        cache["slstm"] = {
+            "c": jnp.zeros((n_super, batch, d), jnp.float32),
+            "n": jnp.full((n_super, batch, d), 1e-6, jnp.float32),
+            "h": jnp.zeros((n_super, batch, d), jnp.float32),
+            "m": jnp.full((n_super, batch, d), -1e30, jnp.float32),
+            "conv": jnp.zeros((n_super, batch, x.conv_width - 1, d), cdt)}
+    elif fam == "hybrid":
+        s = cfg.ssm
+        d_inner, n_heads, conv_dim = ssm_mod._dims(cfg)
+        k = cfg.shared_attn_every
+        n_full = cfg.n_layers // k
+        tail = cfg.n_layers - n_full * k
+        n_attn = n_full + (1 if tail else 0)
+        cache["attn"] = {
+            "k": jnp.zeros((n_attn, batch, max_seq, kh, dh), cdt),
+            "v": jnp.zeros((n_attn, batch, max_seq, kh, dh), cdt)}
+        cache["mamba"] = {
+            "conv": jnp.zeros((n_full, k, batch, s.d_conv - 1, conv_dim), cdt),
+            "ssm": jnp.zeros((n_full, k, batch, n_heads, s.head_dim, s.d_state),
+                             jnp.float32)}
+        if tail:
+            cache["tail"] = {
+                "conv": jnp.zeros((tail, batch, s.d_conv - 1, conv_dim), cdt),
+                "ssm": jnp.zeros((tail, batch, n_heads, s.head_dim, s.d_state),
+                                 jnp.float32)}
+    return cache

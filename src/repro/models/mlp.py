@@ -1,0 +1,33 @@
+"""Dense MLP (gated SwiGLU/GeGLU or plain squared-ReLU/GELU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.distributed.constrain import constrain, seq_axis
+from repro.models.common import act_fn
+from repro.models.params import P
+
+
+def spec_mlp(cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    spec = {
+        "w_in": P((d, f), ("embed", "mlp")),
+        "w_out": P((f, d), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        spec["w_gate"] = P((d, f), ("embed", "mlp"))
+    return spec
+
+
+def mlp(p, x, cfg):
+    act = act_fn(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = constrain(h, "batch", "seq", "mlp")
+    return constrain(jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype)),
+                     "batch", seq_axis(), None)

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer (GShard-style dense dispatch, EP over 'model').
+
+Capacity-based top-k routing with one-hot dispatch/combine einsums — the
+standard JAX MoE formulation (t5x/flaxformer): with experts sharded over the
+'model' mesh axis and tokens over 'data', GSPMD lowers the dispatch einsums
+into the all-to-all-class collectives the roofline tracks.
+
+Supports DeepSeek-style shared experts (always-on) and a router aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constrain import constrain
+from repro.models.common import act_fn
+from repro.models.params import P
+
+
+def spec_moe(cfg):
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_ff_expert
+    spec = {
+        "router": P((d, e), ("embed", "experts"), scale=0.006),
+        "w_in": P((e, d, f), ("experts", "embed", "mlp")),
+        "w_out": P((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        spec["w_gate"] = P((e, d, f), ("experts", "embed", "mlp"))
+    if m.n_shared:
+        fs = m.d_ff_shared * m.n_shared
+        spec["shared"] = {
+            "w_in": P((d, fs), ("embed", "mlp")),
+            "w_out": P((fs, d), ("mlp", "embed")),
+        }
+        if cfg.gated_mlp:
+            spec["shared"]["w_gate"] = P((d, fs), ("embed", "mlp"))
+    return spec
+
+
+MOE_GROUP = 2048   # tokens per routing group (bounds capacity; see below)
+
+
+def moe(p, x, cfg):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Grouped scatter/gather dispatch. The naive GShard one-hot dispatch
+    einsum costs O(T * E * C * d) with C ∝ T — *quadratic* in tokens (the
+    baseline measured in EXPERIMENTS.md §Perf iter 1 spent >99% of MoE
+    FLOPs there). Two changes:
+      1. tokens are routed within fixed GROUPS of G=2048, so per-group
+         capacity C = cf*G*k/E is constant (dispatch work linear in T);
+      2. dispatch/combine are a scatter-add/gather by slot index instead of
+         one-hot matmuls — data movement, not MXU work.
+    Expert GEMMs keep the (E, n*C, d) x (E, d, f) form sharded over
+    'experts' (EP), which GSPMD lowers to the all-to-all class collectives.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g_sz = min(MOE_GROUP, t)
+    while t % g_sz:
+        g_sz //= 2
+    n_g = t // g_sz
+    capacity = max(int(m.capacity_factor * g_sz * m.top_k / m.n_experts), 4)
+
+    xt = constrain(x.reshape(t, d), "batch", None)
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)        # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+    # aux load-balance loss (Switch/GShard form)
+    me = probs.mean(axis=0)
+    onehot_k = jax.nn.one_hot(expert_idx, m.n_experts, dtype=jnp.float32)
+    ce = onehot_k.sum(axis=(0, 1)) / (t * m.top_k)
+    aux = m.n_experts * jnp.sum(me * ce)
+
+    # position within (group, expert) capacity buffer
+    grp_oh = onehot_k.reshape(n_g, g_sz * m.top_k, m.n_experts)
+    pos = (jnp.cumsum(grp_oh, axis=1) - grp_oh)                  # (n,G*k,E)
+    pos = (pos * grp_oh).sum(-1).reshape(t, m.top_k).astype(jnp.int32)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    # scatter tokens into (n_g, E*C, d) slots; gather back after experts
+    grp = jnp.arange(t) // g_sz                                  # (T,)
+    slot = expert_idx * capacity + jnp.minimum(pos, capacity - 1)  # (T, k)
+    flat_slot = grp[:, None] * (m.n_experts * capacity) + slot   # (T, k)
+    buf = jnp.zeros((n_g * m.n_experts * capacity, d), x.dtype)
+    src = xt[:, None, :] * keep[..., None].astype(x.dtype)
+    expert_in = buf.at[flat_slot.reshape(-1)].add(
+        src.reshape(t * m.top_k, d), mode="drop")
+    # placement mirrors distributed/sharding.py: big experts -> EP over
+    # 'model' (all-to-all); small experts -> replicated weights, tokens stay
+    # on their data shards (no expert collectives at all)
+    big_experts = m.n_experts * d * m.d_ff_expert * 4 >= 512e6
+    e_ax = "experts" if big_experts else None
+    t_ax = None if big_experts else "batch"
+    expert_in = constrain(
+        expert_in.reshape(n_g, m.n_experts, capacity, d
+                          ).transpose(1, 0, 2, 3).reshape(m.n_experts,
+                                                          n_g * capacity, d),
+        e_ax, t_ax, None)
+
+    act = act_fn(cfg.act)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["w_in"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = constrain(h, e_ax, t_ax, "mlp" if not big_experts else None)
+    expert_out = constrain(
+        jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(x.dtype)),
+        e_ax, t_ax, None)
+    out_flat = expert_out.reshape(m.n_experts, n_g, capacity, d).transpose(
+        1, 0, 2, 3).reshape(n_g * m.n_experts * capacity, d)
+    gathered = out_flat[flat_slot.reshape(-1)].reshape(t, m.top_k, d)
+    y = jnp.einsum("tkd,tk->td", gathered, gate_vals.astype(x.dtype))
+    y = constrain(y, "batch", None)
+
+    if m.n_shared:
+        sp = p["shared"]
+        hs = jnp.einsum("td,df->tf", xt, sp["w_in"].astype(x.dtype))
+        if "w_gate" in sp:
+            gs = jnp.einsum("td,df->tf", xt, sp["w_gate"].astype(x.dtype))
+            hs = act(gs) * hs
+        else:
+            hs = act(hs)
+        y = y + jnp.einsum("tf,fd->td", hs, sp["w_out"].astype(x.dtype))
+
+    return y.reshape(b, s, d), aux * m.router_aux_coef

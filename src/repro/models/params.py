@@ -1,0 +1,77 @@
+"""Parameter-spec machinery.
+
+Every module declares its parameters once as a ``Spec`` tree of ``P`` entries
+(shape + logical axes + initializer). From a spec we derive:
+  * materialized params  (``init_from_spec``)
+  * abstract params      (``shapes_from_spec`` — ShapeDtypeStructs, no alloc)
+  * logical-axis tree    (``axes_from_spec`` — consumed by distributed/sharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"           # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Spec = Dict[str, Any]  # nested dict of P
+
+
+def stack_spec(spec: Spec, n: int, axis_name: Optional[str] = "layers") -> Spec:
+    """Prepend a stacking dim (for scan-over-layers weights)."""
+    out = {}
+    for k, v in spec.items():
+        if isinstance(v, dict):
+            out[k] = stack_spec(v, n, axis_name)
+        else:
+            out[k] = P((n,) + v.shape, (axis_name,) + v.axes, v.init, v.scale)
+    return out
+
+
+def _leaves(spec: Spec):
+    return jax.tree_util.tree_leaves(spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def init_from_spec(spec: Spec, key: jax.Array, dtype=jnp.float32):
+    leaves = _leaves(spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def make(p: P):
+        i = next(it)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        return (jax.random.normal(keys[i], p.shape, dtype) * p.scale).astype(dtype)
+
+    return jax.tree_util.tree_map(make, spec,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def shapes_from_spec(spec: Spec, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def axes_from_spec(spec: Spec):
+    return jax.tree_util.tree_map(lambda p: p.axes, spec,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def count_spec_params(spec: Spec) -> int:
+    return int(sum(np.prod(p.shape) for p in _leaves(spec)))

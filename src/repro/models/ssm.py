@@ -1,0 +1,173 @@
+"""Mamba-2 (SSD) block — chunkwise-parallel train/prefill + O(1) decode.
+
+Faithful to the SSD formulation [arXiv:2405.21060]: scalar-per-head decay
+``a_t = exp(dt_t * A_h)``; state ``h_t = a_t h_{t-1} + dt_t * B_t ⊗ x_t``;
+output ``y_t = C_t · h_t + D_h x_t``, computed as (intra-chunk masked
+attention-like matmul) + (inter-chunk state scan). TPU adaptation: the
+chunk length is MXU-aligned (128) and the inter-chunk recurrence is a
+``lax.scan`` whose carry is the (H, P, N) state — sized for VMEM residency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constrain import constrain
+from repro.models.common import rmsnorm
+from repro.models.params import P
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def spec_mamba2(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "pre_norm": P((d,), ("embed",), init="zeros"),
+        # order: [z (gate), x, B, C, dt]
+        "w_in": P((d, 2 * d_inner + 2 * s.d_state + n_heads), ("embed", "inner")),
+        "conv_w": P((s.d_conv, conv_dim), (None, "inner"), scale=0.1),
+        "conv_b": P((conv_dim,), ("inner",), init="zeros"),
+        "a_log": P((n_heads,), ("ssm_heads",), init="ones"),
+        "d_skip": P((n_heads,), ("ssm_heads",), init="ones"),
+        "dt_bias": P((n_heads,), ("ssm_heads",), init="zeros"),
+        "norm": P((d_inner,), ("inner",), init="zeros"),
+        "w_out": P((d_inner, d), ("inner", "embed")),
+    }
+
+
+def _split_proj(p, u, cfg):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    u = rmsnorm(u, p["pre_norm"], cfg.norm_eps)
+    zxbcdt = constrain(jnp.einsum("bld,de->ble", u, p["w_in"].astype(u.dtype)),
+                       "batch", "seq", "inner")
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * s.d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, width K. xbc: (B,L,C); state: (B,K-1,C) or None."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    out = jax.nn.silu(out + b.astype(xbc.dtype))
+    new_state = full[:, -(k - 1):, :]
+    return out, new_state
+
+
+def mamba2(p, u, cfg, conv_state=None, ssm_state=None):
+    """Full-sequence SSD. u: (B, L, D) -> (B, L, D).
+
+    When conv_state/ssm_state given, treats u as a continuation (prefill of a
+    cache) and also returns final states.
+    """
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    b, l, _ = u.shape
+    q = min(s.chunk, l)
+    while l % q:
+        q //= 2
+    nc = l // q
+
+    z, xbc, dt = _split_proj(p, u, cfg)
+    xbc, final_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner:d_inner + s.d_state]                 # (B,L,N)
+    cmat = xbc[..., d_inner + s.d_state:]                        # (B,L,N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,L,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (H,)
+    log_decay = dt * a                                            # (B,L,H) <= 0
+
+    xh = x.reshape(b, nc, q, n_heads, s.head_dim)
+    bc = bmat.reshape(b, nc, q, s.d_state)
+    cc = cmat.reshape(b, nc, q, s.d_state)
+    dtc = dt.reshape(b, nc, q, n_heads)
+    ldc = log_decay.reshape(b, nc, q, n_heads)
+    cums = jnp.cumsum(ldc, axis=2)                                # (B,nc,Q,H)
+
+    # intra-chunk: M[t,s] = (C_t·B_s) exp(cum_t - cum_s) dt_s, causal
+    cb = jnp.einsum("bnts,bnqs->bntq", cc, bc,
+                    preferred_element_type=jnp.float32)           # (B,nc,Q,Q) t,q=src
+    delta = cums[:, :, :, None, :] - cums[:, :, None, :, :]       # (B,nc,t,s,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(causal[None, None, :, :, None],
+                  jnp.exp(delta), 0.0) * cb[..., None] * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", m, xh.astype(jnp.float32))
+
+    # chunk-final states: S_k = sum_s exp(cum_Q - cum_s) dt_s B_s x_s
+    w_state = jnp.exp(cums[:, :, -1:, :] - cums) * dtc            # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bnqh,bnqs,bnqhp->bnhps", w_state,
+                         bc.astype(jnp.float32), xh.astype(jnp.float32))
+
+    # inter-chunk scan
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                      # (B,nc,H)
+    h0 = (jnp.zeros((b, n_heads, s.head_dim, s.d_state), jnp.float32)
+          if ssm_state is None else ssm_state.astype(jnp.float32))
+
+    def body(h, inp):
+        dec, s_k = inp                                            # (B,H), (B,H,P,N)
+        h_next = h * dec[:, :, None, None] + s_k
+        return h_next, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        body, h0, (chunk_decay.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                    # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bnqs,bnhps,bnqh->bnqhp", cc.astype(jnp.float32),
+                         h_prevs, jnp.exp(cums))
+    y = (y_intra + y_inter).reshape(b, l, n_heads, s.head_dim)
+    y = y + xh.reshape(b, l, n_heads, s.head_dim).astype(jnp.float32) \
+        * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(u.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = constrain(y, "batch", "seq", "inner")
+    out = constrain(jnp.einsum("ble,ed->bld", y, p["w_out"].astype(u.dtype)),
+                    "batch", "seq", None)
+    if conv_state is not None or ssm_state is not None:
+        return out, final_conv, h_final
+    return out
+
+
+def mamba2_decode(p, u, conv_state, ssm_state, cfg):
+    """One-step decode. u: (B,1,D); conv_state: (B,K-1,C); ssm_state: (B,H,P,N)."""
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    b = u.shape[0]
+    z, xbc, dt = _split_proj(p, u, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x = xbc[:, 0, :d_inner]
+    bvec = xbc[:, 0, d_inner:d_inner + s.d_state]
+    cvec = xbc[:, 0, d_inner + s.d_state:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                         # (B,H)
+    xh = x.reshape(b, n_heads, s.head_dim).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bvec.astype(jnp.float32))
+    ssm_state = ssm_state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, cvec.astype(jnp.float32))
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"].astype(u.dtype))
+    return out, conv_state, ssm_state

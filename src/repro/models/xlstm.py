@@ -1,0 +1,321 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, true recurrence via lax.scan).
+
+mLSTM cell:  C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+             h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with exponential input gate and sigmoid forget gate, computed in log space.
+Chunkwise-parallel form mirrors SSD (see ssm.py): intra-chunk masked
+attention matrix + inter-chunk (dk, dv) state scan, with the paper's
+running-max stabilizer carried exactly through the chunk scan
+(C_true = c_hat * exp(M)); the recurrent decode path uses the same
+stabilizer per step, so chunked and recurrent paths agree to fp32.
+
+sLSTM: 4-gate scalar cell with per-head block-diagonal recurrent matrices and
+exponential-gate stabilizer m_t, scanned over time (inherently sequential —
+the paper's reason mLSTM dominates the 7:1 ratio).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constrain import constrain
+from repro.models.common import rmsnorm
+from repro.models.params import P
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+def _mdims(cfg):
+    x = cfg.xlstm
+    inner = int(x.proj_factor_m * cfg.d_model)
+    heads = cfg.n_heads
+    dh = inner // heads
+    return inner, heads, dh
+
+
+def spec_mlstm(cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    inner, heads, dh = _mdims(cfg)
+    return {
+        "norm": P((d,), ("embed",), init="zeros"),
+        "w_up": P((d, inner), ("embed", "inner")),
+        "w_gate": P((d, inner), ("embed", "inner")),
+        "conv_w": P((x.conv_width, inner), (None, "inner"), scale=0.1),
+        "conv_b": P((inner,), ("inner",), init="zeros"),
+        # block-diagonal per-head projections (xLSTM paper's BlockDiagonal)
+        "wq": P((heads, dh, dh), ("heads", None, "head_dim")),
+        "wk": P((heads, dh, dh), ("heads", None, "head_dim")),
+        "wv": P((heads, dh, dh), ("heads", None, "head_dim")),
+        "w_if": P((inner, 2 * heads), ("inner", None), scale=0.01),
+        "b_if": P((2 * heads,), (None,), init="zeros"),
+        "out_norm": P((inner,), ("inner",), init="zeros"),
+        "w_down": P((inner, d), ("inner", "embed")),
+    }
+
+
+def _conv_causal(x, w, b, state=None):
+    k = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    full = jnp.concatenate([pad, x], axis=1)
+    out = sum(full[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(x.dtype)), full[:, -(k - 1):, :]
+
+
+def mlstm(p, u, cfg, return_state: bool = False):
+    """u: (B, L, D). Chunkwise-parallel mLSTM block (pre-norm, residual added
+    by the caller) with an exact carried running-max stabilizer: the scan
+    carry is (c_hat, n_hat, M) with C_true = c_hat * exp(M)."""
+    xc = cfg.xlstm
+    inner, heads, dh = _mdims(cfg)
+    b, l, d = u.shape
+    q_len = min(xc.chunk, l)
+    while l % q_len:
+        q_len //= 2
+    nc = l // q_len
+
+    xn = rmsnorm(u, p["norm"], cfg.norm_eps)
+    up = constrain(jnp.einsum("bld,de->ble", xn, p["w_up"].astype(u.dtype)),
+                   "batch", "seq", "inner")
+    gate = constrain(jnp.einsum("bld,de->ble", xn, p["w_gate"].astype(u.dtype)),
+                     "batch", "seq", "inner")
+    conv_out, conv_tail = _conv_causal(up, p["conv_w"], p["conv_b"])
+
+    conv_h = conv_out.reshape(b, l, heads, dh)
+    up_h = up.reshape(b, l, heads, dh)
+    qm = jnp.einsum("blhd,hde->blhe", conv_h, p["wq"].astype(u.dtype))
+    km = jnp.einsum("blhd,hde->blhe", conv_h, p["wk"].astype(u.dtype)) * dh ** -0.5
+    vm = jnp.einsum("blhd,hde->blhe", up_h, p["wv"].astype(u.dtype))
+    gates = jnp.einsum("ble,eg->blg", conv_out, p["w_if"].astype(u.dtype)) \
+        + p["b_if"].astype(u.dtype)
+    i_gate = gates[..., :heads].astype(jnp.float32)               # log-space input
+    f_gate = jax.nn.log_sigmoid(gates[..., heads:].astype(jnp.float32))
+
+    qh = qm.reshape(b, nc, q_len, heads, dh).astype(jnp.float32)
+    kh = km.reshape(b, nc, q_len, heads, dh).astype(jnp.float32)
+    vh = vm.reshape(b, nc, q_len, heads, dh).astype(jnp.float32)
+    del qm, km, vm
+    ic = i_gate.reshape(b, nc, q_len, heads)
+    fc = f_gate.reshape(b, nc, q_len, heads)
+    g = jnp.cumsum(fc, axis=2)                                    # (B,nc,Q,H), <= 0
+    # running intra-chunk stabilizer: max_{s<=t} (g_t - g_s + i_s)
+    runmax = jax.lax.cummax(ic - g, axis=2)
+    intra_max = g + runmax                                        # (B,nc,Q,H)
+
+    causal = jnp.tril(jnp.ones((q_len, q_len), bool))
+
+    c0 = jnp.zeros((b, heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, heads, dh), jnp.float32)
+    m0 = jnp.full((b, heads), -1e30, jnp.float32)
+
+    def body(carry, inp):
+        c_hat, n_hat, m_run = carry
+        qk_, kk_, vk_, gk, ick, imaxk = inp                       # (B,Q,H,dh) / (B,Q,H)
+        g_q = gk[:, -1]                                           # (B,H) chunk total
+        d_t = jnp.maximum(imaxk, m_run[:, None, :] + gk)          # (B,Q,H)
+        # intra-chunk
+        logw = (gk[:, :, None, :] - gk[:, None, :, :]
+                + ick[:, None, :, :] - d_t[:, :, None, :])        # (B,t,s,H)
+        w = jnp.where(causal[None, :, :, None], jnp.exp(logw), 0.0)
+        qk_scores = jnp.einsum("bthd,bshd->bhts", qk_, kk_,
+                               preferred_element_type=jnp.float32)
+        num = jnp.einsum("bhts,btsh,bshd->bthd", qk_scores, w, vk_)
+        den = jnp.einsum("bhts,btsh->bth", qk_scores, w)
+        # inter-chunk (previous state)
+        w_int = jnp.exp(m_run[:, None, :] + gk - d_t)             # (B,Q,H), <= 1
+        num = num + jnp.einsum("bthd,bhde,bth->bthe", qk_, c_hat, w_int)
+        den = den + jnp.einsum("bthd,bhd,bth->bth", qk_, n_hat, w_int)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-d_t))[..., None]
+        # carry update (state stabilizer = intra_max at chunk end)
+        sstab = imaxk[:, -1]                                      # (B,H)
+        m_new = jnp.maximum(m_run + g_q, sstab)
+        w_state = jnp.exp(g_q[:, None, :] - gk + ick - sstab[:, None, :])
+        c_rel = jnp.einsum("bsh,bshd,bshe->bhde", w_state, kk_, vk_)
+        n_rel = jnp.einsum("bsh,bshd->bhd", w_state, kk_)
+        scale_old = jnp.exp(m_run + g_q - m_new)
+        scale_new = jnp.exp(sstab - m_new)
+        c_hat = c_hat * scale_old[:, :, None, None] + c_rel * scale_new[:, :, None, None]
+        n_hat = n_hat * scale_old[:, :, None] + n_rel * scale_new[:, :, None]
+        return (c_hat, n_hat, m_new), h
+
+    xs = (qh.transpose(1, 0, 2, 3, 4), kh.transpose(1, 0, 2, 3, 4),
+          vh.transpose(1, 0, 2, 3, 4), g.transpose(1, 0, 2, 3),
+          ic.transpose(1, 0, 2, 3), intra_max.transpose(1, 0, 2, 3))
+    (cF, nF, mF), hs = jax.lax.scan(body, (c0, n0, m0), xs)       # (nc,B,Q,H,dh)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, l, inner).astype(u.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    h = constrain(h * jax.nn.silu(gate), "batch", "seq", "inner")
+    y = constrain(jnp.einsum("ble,ed->bld", h, p["w_down"].astype(u.dtype)),
+                  "batch", "seq", None)
+    if return_state:
+        return y, {"c": cF, "n": nF, "m": mF, "conv": conv_tail}
+    return y
+
+
+def mlstm_init_state(cfg, batch, dtype=jnp.float32):
+    xc = cfg.xlstm
+    inner, heads, dh = _mdims(cfg)
+    return {
+        "c": jnp.zeros((batch, heads, dh, dh), dtype),
+        "n": jnp.zeros((batch, heads, dh), dtype),
+        "m": jnp.full((batch, heads), -1e30, dtype),
+        "conv": jnp.zeros((batch, xc.conv_width - 1, inner), dtype),
+    }
+
+
+def mlstm_decode(p, u, state, cfg):
+    """One-step exact recurrent mLSTM (with running-max stabilizer)."""
+    inner, heads, dh = _mdims(cfg)
+    b = u.shape[0]
+    xn = rmsnorm(u, p["norm"], cfg.norm_eps)
+    up = jnp.einsum("bld,de->ble", xn, p["w_up"].astype(u.dtype))
+    gate = jnp.einsum("bld,de->ble", xn, p["w_gate"].astype(u.dtype))
+    conv_out, new_conv = _conv_causal(up, p["conv_w"], p["conv_b"], state["conv"])
+    conv_h = conv_out.reshape(b, 1, heads, dh)
+    up_h = up.reshape(b, 1, heads, dh)
+    qv = jnp.einsum("blhd,hde->blhe", conv_h, p["wq"].astype(u.dtype))[:, 0]
+    kv = jnp.einsum("blhd,hde->blhe", conv_h, p["wk"].astype(u.dtype))[:, 0] * dh ** -0.5
+    vv = jnp.einsum("blhd,hde->blhe", up_h, p["wv"].astype(u.dtype))[:, 0]
+    gates = (jnp.einsum("ble,eg->blg", conv_out, p["w_if"].astype(u.dtype))
+             + p["b_if"].astype(u.dtype))[:, 0]
+    i_t = gates[:, :heads].astype(jnp.float32)
+    f_t = jax.nn.log_sigmoid(gates[:, heads:].astype(jnp.float32))
+
+    m_new = jnp.maximum(f_t + state["m"], i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + state["m"] - m_new)
+    qh = qv.reshape(b, heads, dh).astype(jnp.float32)
+    kh = kv.reshape(b, heads, dh).astype(jnp.float32)
+    vh = vv.reshape(b, heads, dh).astype(jnp.float32)
+    c = state["c"] * f_p[:, :, None, None] + i_p[:, :, None, None] \
+        * kh[:, :, :, None] * vh[:, :, None, :]
+    n = state["n"] * f_p[:, :, None] + i_p[:, :, None] * kh
+    num = jnp.einsum("bhde,bhd->bhe", c, qh)
+    # stabilized normalizer: h_true = num/max(|den|, 1) in true scale, i.e.
+    # max(|den_hat|, exp(-m)) in the carried (c,n are *exp(-m)) scale.
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qh)),
+                      jnp.exp(-m_new))
+    h = (num / den[:, :, None]).reshape(b, 1, inner).astype(u.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(gate)
+    y = jnp.einsum("ble,ed->bld", h, p["w_down"].astype(u.dtype))
+    return y, {"c": c, "n": n, "m": m_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+def spec_slstm(cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    heads = cfg.n_heads
+    dh = d // heads
+    ffn = int(x.proj_factor_s * d)
+    return {
+        "norm": P((d,), ("embed",), init="zeros"),
+        "conv_w": P((x.conv_width, d), (None, "embed"), scale=0.1),
+        "conv_b": P((d,), ("embed",), init="zeros"),
+        "w_gates": P((d, 4 * d), ("embed", "inner")),            # i,f,z,o
+        "r_gates": P((heads, dh, 4 * dh), ("heads", None, None), scale=0.01),
+        "b_gates": P((4 * d,), ("inner",), init="zeros"),
+        "out_norm": P((d,), ("embed",), init="zeros"),
+        "ffn": {
+            "w_in": P((d, ffn), ("embed", "mlp")),
+            "w_gate": P((d, ffn), ("embed", "mlp")),
+            "w_out": P((ffn, d), ("mlp", "embed")),
+        },
+    }
+
+
+def slstm_init_state(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    x = cfg.xlstm
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.full((batch, d), 1e-6, dtype),
+        "h": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, d), -1e30, dtype),
+        "conv": jnp.zeros((batch, x.conv_width - 1, d), dtype),
+    }
+
+
+def _slstm_cell(p, wx, h_prev, c, n, m, cfg):
+    """One step. wx: (B, 4d) precomputed input contribution."""
+    heads = cfg.n_heads
+    d = cfg.d_model
+    dh = d // heads
+    b = wx.shape[0]
+    hh = h_prev.reshape(b, heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r_gates"].astype(jnp.float32))
+    rec = rec.reshape(b, heads, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    gates = wx + rec + p["b_gates"].astype(jnp.float32)
+    it, ft, zt, ot = jnp.split(gates, 4, axis=-1)
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(zt)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm(p, u, cfg, state=None, return_state: bool = False):
+    """u: (B, L, D) -> (B, L, D). Sequential scan over time."""
+    b, l, d = u.shape
+    xn = rmsnorm(u, p["norm"], cfg.norm_eps)
+    conv_out, conv_tail = _conv_causal(xn, p["conv_w"], p["conv_b"])
+    # i, f gates see the conv branch; z, o the raw branch (xLSTM paper)
+    wx_if = jnp.einsum("bld,de->ble",
+                       conv_out, p["w_gates"][:, :2 * d].astype(u.dtype))
+    wx_zo = jnp.einsum("bld,de->ble",
+                       xn, p["w_gates"][:, 2 * d:].astype(u.dtype))
+    wx = jnp.concatenate([wx_if, wx_zo], axis=-1).astype(jnp.float32)
+
+    st = state or slstm_init_state(cfg, b)
+
+    def body(carry, wx_t):
+        h, c, n, m = carry
+        h2, c2, n2, m2 = _slstm_cell(p, wx_t, h, c, n, m, cfg)
+        return (h2, c2, n2, m2), h2
+
+    (hF, cF, nF, mF), hs = jax.lax.scan(
+        body, (st["h"].astype(jnp.float32), st["c"].astype(jnp.float32),
+               st["n"].astype(jnp.float32), st["m"].astype(jnp.float32)),
+        wx.transpose(1, 0, 2))
+    h_seq = hs.transpose(1, 0, 2).astype(u.dtype)
+    h_seq = rmsnorm(h_seq, p["out_norm"], cfg.norm_eps)
+
+    f = p["ffn"]
+    hf = jnp.einsum("bld,df->blf", h_seq, f["w_in"].astype(u.dtype))
+    gf = jnp.einsum("bld,df->blf", h_seq, f["w_gate"].astype(u.dtype))
+    y = jnp.einsum("blf,fd->bld", jax.nn.silu(gf) * hf,
+                   f["w_out"].astype(u.dtype))
+    if return_state:
+        return y, {"c": cF, "n": nF, "h": hF, "m": mF, "conv": conv_tail}
+    return y
+
+
+def slstm_decode(p, u, state, cfg):
+    b, _, d = u.shape
+    xn = rmsnorm(u, p["norm"], cfg.norm_eps)
+    conv_out, new_conv = _conv_causal(xn, p["conv_w"], p["conv_b"], state["conv"])
+    wx_if = jnp.einsum("bld,de->ble",
+                       conv_out, p["w_gates"][:, :2 * d].astype(u.dtype))[:, 0]
+    wx_zo = jnp.einsum("bld,de->ble",
+                       xn, p["w_gates"][:, 2 * d:].astype(u.dtype))[:, 0]
+    wx = jnp.concatenate([wx_if, wx_zo], axis=-1).astype(jnp.float32)
+    h2, c2, n2, m2 = _slstm_cell(p, wx, state["h"].astype(jnp.float32),
+                                 state["c"].astype(jnp.float32),
+                                 state["n"].astype(jnp.float32),
+                                 state["m"].astype(jnp.float32), cfg)
+    hn = rmsnorm(h2[:, None, :].astype(u.dtype), p["out_norm"], cfg.norm_eps)
+    f = p["ffn"]
+    hf = jnp.einsum("bld,df->blf", hn, f["w_in"].astype(u.dtype))
+    gf = jnp.einsum("bld,df->blf", hn, f["w_gate"].astype(u.dtype))
+    y = jnp.einsum("blf,fd->bld", jax.nn.silu(gf) * hf,
+                   f["w_out"].astype(u.dtype))
+    return y, {"c": c2, "n": n2, "h": h2, "m": m2, "conv": new_conv}

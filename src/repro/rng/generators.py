@@ -1,0 +1,190 @@
+"""Generators under test, in JAX.
+
+Every generator exposes ``block(seed, stream, n) -> uint32[n]`` — a fresh,
+order-independent stream per (seed, stream) pair. This is the TestU01-
+parallel "individual test re-instantiates the generator" semantics (paper
+§4.1/§11) made deterministic: job results are bitwise independent of which
+worker/round executes them, which is what makes the pool's hold/release and
+speculative re-execution free to reconcile.
+
+Counter-based generators (splitmix64, threefry, pcg32/lcg64 via LCG
+jump-ahead, middle-square-weyl) evaluate lanes fully in parallel; classic
+sequential recurrences (xorshift64*, MWC, RANDU, MINSTD) run as ``lax.scan``.
+RANDU is deliberately included as a known-bad generator the battery must
+flag.
+
+64-bit integer ops require tracing under x64 (``with x64():`` —
+``jax.experimental.enable_x64``); constants here are Python ints so nothing
+truncates at import time. All public entry points are safe to trace inside
+the battery's jitted programs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+GOLDEN = 0x9E3779B97F4A7C15
+MASK32 = 0xFFFFFFFF
+
+
+def x64():
+    """Context manager enabling 64-bit tracing (jax.experimental.enable_x64)."""
+    return jax.experimental.enable_x64()
+
+
+def _u64(x):
+    return jnp.asarray(x, jnp.uint64)
+
+
+def _mix_seed(seed, stream):
+    return (_u64(seed) * _u64(6364136223846793005)
+            + _u64(stream) * _u64(GOLDEN) + _u64(1442695040888963407))
+
+
+def _hi32(x):
+    return (x >> 32).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# counter-based
+
+def _splitmix_hash(z):
+    z = (z + _u64(GOLDEN))
+    z = (z ^ (z >> 30)) * _u64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> 27)) * _u64(0x94D049BB133111EB)
+    return z ^ (z >> 31)
+
+
+def splitmix64_block(seed, stream, n, offset=0):
+    base = _mix_seed(seed, stream)
+    ctr = (jnp.arange(n, dtype=jnp.uint64) + _u64(offset)) * _u64(GOLDEN) + base
+    return _hi32(_splitmix_hash(ctr))
+
+
+def msweyl_block(seed, stream, n):
+    """Middle-Square Weyl sequence (Widynski) — counter form."""
+    s = _mix_seed(seed, stream) | _u64(1)
+    w = jnp.arange(1, n + 1, dtype=jnp.uint64) * s
+    x = w
+    for _ in range(3):
+        x = x * x + w
+        x = (x >> 32) | (x << 32)
+    return _hi32(x)
+
+
+def threefry_block(seed, stream, n):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), stream)
+    return jax.random.bits(key, (n,), jnp.uint32)
+
+
+LCG_A = 6364136223846793005
+LCG_C = 1442695040888963407
+
+
+def _lcg_jump(s0, idx):
+    """state_i = A^i s0 + C (A^i-1)/(A-1), per lane in O(64) steps."""
+    a_acc = jnp.ones_like(idx)
+    c_acc = jnp.zeros_like(idx)
+    a_pow = jnp.broadcast_to(_u64(LCG_A), idx.shape)
+    c_pow = jnp.broadcast_to(_u64(LCG_C), idx.shape)
+    for bit in range(64):
+        take = ((idx >> bit) & 1) == 1
+        c_acc = jnp.where(take, c_acc * a_pow + c_pow, c_acc)
+        a_acc = jnp.where(take, a_acc * a_pow, a_acc)
+        c_pow = c_pow * (a_pow + 1)
+        a_pow = a_pow * a_pow
+    return a_acc * s0 + c_acc
+
+
+def pcg32_block(seed, stream, n, offset=0):
+    """PCG-XSH-RR 64/32 with per-lane LCG jump-ahead."""
+    st = _lcg_jump(_mix_seed(seed, stream),
+                   jnp.arange(n, dtype=jnp.uint64) + _u64(offset))
+    xorshifted = (((st >> 18) ^ st) >> 27).astype(jnp.uint32)
+    rot = (st >> 59).astype(jnp.uint32)
+    return (xorshifted >> rot) | (xorshifted << ((-rot) & jnp.uint32(31)))
+
+
+def lcg64_block(seed, stream, n):
+    st = _lcg_jump(_mix_seed(seed, stream), jnp.arange(n, dtype=jnp.uint64))
+    return _hi32(st)
+
+
+# ---------------------------------------------------------------------------
+# sequential recurrences
+
+def _scan_block(step, state0, n):
+    def body(st, _):
+        return step(st)
+    _, outs = jax.lax.scan(body, state0, None, length=n)
+    return outs
+
+
+def xorshift64s_block(seed, stream, n):
+    def step(s):
+        s = s ^ (s >> 12)
+        s = s ^ (s << 25)
+        s = s ^ (s >> 27)
+        return s, _hi32(s * _u64(0x2545F4914F6CDD1D))
+    return _scan_block(step, _mix_seed(seed, stream) | _u64(1), n)
+
+
+def mwc_block(seed, stream, n):
+    """Multiply-with-carry (Marsaglia), 32-bit lag-1."""
+    s = _mix_seed(seed, stream)
+    x0 = (s >> 32) | _u64(1)
+    c0 = (s & _u64(MASK32)) | _u64(1)
+
+    def step(st):
+        x, c = st
+        t = _u64(4294957665) * (x & _u64(MASK32)) + c
+        return (t & _u64(MASK32), t >> 32), (t & _u64(MASK32)).astype(jnp.uint32)
+    return _scan_block(step, (x0, c0), n)
+
+
+def randu_block(seed, stream, n):
+    """RANDU: x <- 65539 x mod 2^31. Famously defective — the battery's
+    canary (must FAIL spectral-sensitive tests)."""
+    s0 = (_mix_seed(seed, stream) & _u64(0x7FFFFFFF)) | _u64(1)
+
+    def step(s):
+        s = (s * _u64(65539)) & _u64(0x7FFFFFFF)
+        return s, (s << 1).astype(jnp.uint32)
+    return _scan_block(step, s0, n)
+
+
+def minstd_block(seed, stream, n):
+    """MINSTD: x <- 16807 x mod (2^31 - 1)."""
+    def step(s):
+        s = (s * _u64(16807)) % _u64(2147483647)
+        return s, (s << 1).astype(jnp.uint32)
+    s0 = (_mix_seed(seed, stream) % _u64(2147483646)) + _u64(1)
+    return _scan_block(step, s0, n)
+
+
+GENERATORS: Dict[str, Callable] = {
+    "splitmix64": splitmix64_block,
+    "msweyl": msweyl_block,
+    "threefry": threefry_block,
+    "pcg32": pcg32_block,
+    "lcg64": lcg64_block,
+    "xorshift64s": xorshift64s_block,
+    "mwc": mwc_block,
+    "randu": randu_block,
+    "minstd": minstd_block,
+}
+GEN_IDS = {name: i for i, name in enumerate(GENERATORS)}
+
+
+def gen_block_by_id(gen_id, seed, stream, n):
+    """lax.switch-able: uint32[n] block from generator #gen_id."""
+    fns = [functools.partial(g, seed, stream, n) for g in GENERATORS.values()]
+    return jax.lax.switch(gen_id, fns)
+
+
+def to_unit(bits):
+    """uint32 -> float32 in [0, 1)."""
+    return (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))

@@ -1,0 +1,89 @@
+"""Per-kernel allclose vs pure-jnp oracles (interpret mode), with
+hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gf2_rank.ops import rank32
+from repro.kernels.gf2_rank.ref import gf2_rank_ref
+from repro.kernels.histogram.ops import bincount
+from repro.kernels.histogram.ref import histogram_ref
+
+
+# ---------------------------------------------------------------------- rank
+
+@given(m=st.integers(1, 700), seed=st.integers(0, 100))
+@settings(max_examples=12, deadline=None)
+def test_gf2_rank_matches_ref(m, seed):
+    mats = jax.random.bits(jax.random.PRNGKey(seed), (m, 32), jnp.uint32)
+    assert (rank32(mats) == gf2_rank_ref(mats)).all()
+
+
+def test_gf2_rank_known_cases():
+    eye = (jnp.uint32(1) << (31 - jnp.arange(32, dtype=jnp.uint32)))
+    assert int(rank32(eye[None])[0]) == 32
+    assert int(rank32(jnp.zeros((1, 32), jnp.uint32))[0]) == 0
+    assert int(rank32(jnp.full((1, 32), 1, jnp.uint32))[0]) == 1
+    # duplicated rows halve the rank
+    half = jnp.concatenate([eye[:16], eye[:16]])[None]
+    assert int(rank32(half.reshape(1, 32))[0]) == 16
+
+
+# ----------------------------------------------------------------- histogram
+
+@given(n=st.integers(1, 6000), k=st.sampled_from([8, 37, 64, 257]),
+       seed=st.integers(0, 50))
+@settings(max_examples=12, deadline=None)
+def test_histogram_matches_ref(n, k, seed):
+    idx = jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, k)
+    assert (bincount(idx, k) == histogram_ref(idx, k)).all()
+
+
+def test_histogram_total():
+    idx = jnp.zeros((4096,), jnp.int32)
+    out = bincount(idx, 4)
+    assert float(out[0]) == 4096 and float(out[1:].sum()) == 0
+
+
+# ----------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("b,s,h,kh,dh,cap,dtype", [
+    (2, 256, 4, 2, 64, 0.0, jnp.float32),
+    (1, 384, 2, 2, 128, 50.0, jnp.float32),
+    (1, 128, 8, 1, 64, 0.0, jnp.float32),      # MQA
+    (2, 256, 4, 4, 64, 0.0, jnp.bfloat16),
+])
+def test_flash_attention_matches_ref(b, s, h, kh, dh, cap, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, dh), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kh, dh), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kh, dh), dtype)
+    o = mha(q, k, v, scale=dh ** -0.5, softcap=cap)
+    rep = h // kh
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kr = jnp.repeat(k, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    vr = jnp.repeat(v, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    o_ref = attention_ref(qr, kr, vr, scale=dh ** -0.5, softcap=cap)
+    o_ref = o_ref.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+
+
+def test_flash_vs_model_blocked_path():
+    """Kernel agrees with the model's XLA blocked-attention twin."""
+    from repro.models import attention as A
+    b, s, h, dh = 1, 2048, 4, 64
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (b, s, h, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, dh))
+    pos = jnp.arange(s)
+    xla = A.sdpa(q, k, v, pos, pos, "causal", 0, dh ** -0.5, 0.0)
+    pallas = mha(q, k, v, scale=dh ** -0.5)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pallas),
+                               atol=3e-5)

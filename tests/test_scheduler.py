@@ -1,0 +1,57 @@
+"""Property tests for the pool scheduler (the paper's batch model)."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import make_plan, replan
+
+
+@given(k=st.integers(1, 300), w=st.integers(1, 128))
+@settings(max_examples=60, deadline=None)
+def test_roundrobin_matches_paper_batch_model(k, w):
+    """ceil(K/W) batches — the paper's §11 performance model."""
+    plan = make_plan([1.0] * k, w, "roundrobin")
+    assert plan.rounds == math.ceil(k / w)
+
+
+@given(k=st.integers(1, 200), w=st.integers(1, 64),
+       seed=st.integers(0, 10))
+@settings(max_examples=60, deadline=None)
+def test_every_test_scheduled_exactly_once(k, w, seed):
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.1, 10.0, k)
+    for mode in ("roundrobin", "lpt"):
+        plan = make_plan(costs, w, mode)
+        sched = sorted(int(i) for i in plan.assignment.ravel() if i >= 0)
+        assert sched == list(range(k))
+
+
+@given(k=st.integers(2, 150), w=st.integers(2, 48),
+       seed=st.integers(0, 20))
+@settings(max_examples=60, deadline=None)
+def test_lpt_never_worse_than_roundrobin(k, w, seed):
+    rng = np.random.default_rng(seed)
+    costs = rng.lognormal(0, 1.5, k)        # skewed, like TestU01's tests
+    rr = make_plan(costs, w, "roundrobin")
+    lpt = make_plan(costs, w, "lpt")
+    assert lpt.est_makespan <= rr.est_makespan + 1e-9
+    # LPT's classic bound: makespan <= (4/3 - 1/3W) * OPT >= ideal
+    assert lpt.est_makespan >= lpt.est_ideal - 1e-9
+
+
+def test_paper_numbers_106_tests():
+    """The paper's concrete claim: 106 tests on 40 cores -> 3 batches;
+    70 -> 2; 90 -> still 2 (no improvement)."""
+    for w, batches in ((40, 3), (70, 2), (90, 2)):
+        plan = make_plan([1.0] * 106, w, "roundrobin")
+        assert plan.rounds == batches
+
+
+@given(w=st.integers(1, 32),
+       missing=st.sets(st.integers(0, 49), min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_replan_covers_exactly_missing(w, missing):
+    plan = replan(sorted(missing), [1.0] * 50, w)
+    covered = sorted(int(i) for i in plan.assignment.ravel() if i >= 0)
+    assert covered == sorted(missing)

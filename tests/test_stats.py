@@ -1,0 +1,118 @@
+"""Statistical validity of the battery (calibration + canaries) and
+property tests for the RNG substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.battery import build_battery
+from repro.core.pool import run_sequential
+from repro.rng import generators as G
+from repro.stats import special
+from repro.stats.tests import KERNELS
+
+SCALE = 0.125
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return build_battery("smallcrush", SCALE)
+
+
+def _suspects(ps):
+    ps = np.asarray(ps)
+    return int(((ps < 1e-4) | (ps > 1 - 1e-4)).sum())
+
+
+@pytest.mark.parametrize("gen", ["splitmix64", "threefry", "pcg32",
+                                 "xorshift64s", "mwc", "msweyl", "lcg64"])
+def test_good_generators_pass(entries, gen):
+    _, ps = run_sequential(entries, 9, G.GEN_IDS[gen])
+    assert _suspects(ps) == 0, np.asarray(ps)
+
+
+@pytest.mark.parametrize("gen,min_fail", [("randu", 2), ("minstd", 1)])
+def test_bad_generators_fail(entries, gen, min_fail):
+    _, ps = run_sequential(entries, 9, G.GEN_IDS[gen])
+    assert _suspects(ps) >= min_fail
+
+
+def test_pvalues_roughly_uniform(entries):
+    """Meta-test: pooled good-generator p-values are not clustered."""
+    allp = []
+    for seed in range(6):
+        _, ps = run_sequential(entries, seed, G.GEN_IDS["splitmix64"])
+        allp.extend(np.asarray(ps).tolist())
+    allp = np.array(allp)
+    assert 0.25 < allp.mean() < 0.75
+    assert (allp < 0.5).sum() > len(allp) * 0.2
+
+
+# ------------------------------------------------------------- RNG substrate
+
+@given(seed=st.integers(0, 1000), stream=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_streams_deterministic_and_distinct(seed, stream):
+    with G.x64():
+        a = np.asarray(G.splitmix64_block(seed, stream, 64))
+        b = np.asarray(G.splitmix64_block(seed, stream, 64))
+        c = np.asarray(G.splitmix64_block(seed, stream + 1, 64))
+    assert (a == b).all()
+    assert (a != c).any()
+
+
+def test_counter_offset_continuation():
+    """block(n=2k) == block(n=k) ++ block(n=k, offset=k) — what makes
+    sequential-reuse mode and over-decomposition exact."""
+    with G.x64():
+        full = np.asarray(G.splitmix64_block(5, 1, 128))
+        a = np.asarray(G.splitmix64_block(5, 1, 64))
+        b = np.asarray(G.splitmix64_block(5, 1, 64, offset=64))
+    assert (full == np.concatenate([a, b])).all()
+
+
+def test_lcg_jump_matches_sequential():
+    """O(log n) jump-ahead must equal stepping the recurrence."""
+    with G.x64():
+        jumped = np.asarray(G.lcg64_block(3, 2, 16), np.uint64)
+        s = np.uint64(0)
+        import numpy as _np
+        with _np.errstate(over="ignore"):
+            s = (_np.uint64(3) * _np.uint64(G.LCG_A * 2094213091 % 2**64))
+        # recompute directly: state_i for i=0.. via numpy
+        st = np.asarray(G._mix_seed(3, 2)).astype(np.uint64)
+        out = []
+        x = int(st)
+        for i in range(16):
+            out.append((x >> 32) & 0xFFFFFFFF)
+            x = (G.LCG_A * x + G.LCG_C) % 2 ** 64
+        assert (jumped == np.array(out, np.uint64).astype(np.uint32)).all()
+
+
+def test_to_unit_range():
+    with G.x64():
+        bits = G.splitmix64_block(0, 0, 4096)
+    u = np.asarray(G.to_unit(bits))
+    assert (u >= 0).all() and (u < 1).all()
+    assert 0.45 < u.mean() < 0.55
+
+
+# ------------------------------------------------------------ special funcs
+
+def test_chi2_sf_sanity():
+    assert float(special.chi2_sf(jnp.float32(0.0), 5.0)) == pytest.approx(1.0)
+    # median of chi2_k is ~ k(1-2/9k)^3
+    assert float(special.chi2_sf(jnp.float32(4.35), 5.0)) == pytest.approx(
+        0.5, abs=0.02)
+
+
+def test_kernels_uniform_signature(entries):
+    """Every kernel returns finite (stat, p) on random bits — the contract
+    the pool's lax.switch dispatch relies on."""
+    with G.x64():
+        bits = G.splitmix64_block(1, 1, 262144)   # covers kernel defaults
+    for name, fn in KERNELS.items():
+        stat, p = fn(bits)
+        assert jnp.isfinite(stat), name
+        assert 0.0 <= float(p) <= 1.0, (name, float(p))

@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the paper's system (battery + pool)."""
+import numpy as np
+import pytest
+
+from repro.core.battery import build_battery, max_words
+from repro.core.pool import make_batch_runner, run_sequential
+from repro.core.queue import run_battery
+from repro.core.scheduler import make_plan, replan
+from repro.core import stitch
+from repro.launch.mesh import make_pool_mesh
+from repro.rng.generators import GEN_IDS
+
+SCALE = 0.125  # CI-sized battery
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_pool_mesh()
+
+
+@pytest.fixture(scope="module")
+def smallcrush():
+    return build_battery("smallcrush", SCALE)
+
+
+def test_battery_sizes():
+    assert len(build_battery("smallcrush", SCALE)) == 10
+    assert len(build_battery("crush", SCALE)) == 96
+    assert len(build_battery("bigcrush", SCALE)) == 106
+
+
+def test_good_generator_passes(mesh):
+    res = run_battery("smallcrush", "splitmix64", 7, mesh, scale=SCALE)
+    assert "SUSPECT" not in res.report
+    assert len(res.results) == 10
+
+
+def test_randu_fails(mesh):
+    res = run_battery("smallcrush", "randu", 7, mesh, scale=SCALE)
+    assert res.report.count("SUSPECT") >= 2          # known-bad canary
+
+
+def test_pool_matches_sequential(smallcrush, mesh):
+    """The paper's accuracy criterion (§11): distributed results identical
+    to the single-worker run of the same individual-test semantics."""
+    stats_seq, ps_seq = run_sequential(smallcrush, 3, GEN_IDS["pcg32"])
+    res = run_battery("smallcrush", "pcg32", 3, mesh, scale=SCALE)
+    for i in range(10):
+        assert np.isclose(res.results[i][0], float(stats_seq[i]), rtol=1e-6)
+        assert np.isclose(res.results[i][1], float(ps_seq[i]), rtol=1e-6)
+
+
+def test_results_worker_count_invariant(smallcrush):
+    """Counter-based streams: results must not depend on pool width or
+    scheduling mode (what makes hold/release + speculation reconcilable)."""
+    mesh = make_pool_mesh()
+    runner = make_batch_runner(smallcrush, mesh)
+    outs = []
+    for mode in ("roundrobin", "lpt"):
+        plan = make_plan([e.cost for e in smallcrush], 1, mode)
+        stats, ps = runner(np.asarray(plan.assignment), np.int32(5),
+                           np.int32(GEN_IDS["splitmix64"]))
+        res = stitch.fold(plan.assignment, np.asarray(stats),
+                          np.asarray(ps))
+        outs.append([res[i] for i in range(10)])
+    assert outs[0] == outs[1]
+
+
+def test_checkpoint_restart(tmp_path, mesh):
+    ck = str(tmp_path / "battery.ck")
+    res1 = run_battery("smallcrush", "splitmix64", 11, mesh, scale=SCALE,
+                       checkpoint_path=ck)
+    # restart: everything already done -> zero rounds run
+    res2 = run_battery("smallcrush", "splitmix64", 11, mesh, scale=SCALE,
+                       checkpoint_path=ck)
+    assert res2.rounds_run == 0
+    assert res1.results == res2.results
+
+
+def test_hold_release_replan():
+    """HELD jobs (invalid results) are re-planned, not lost."""
+    results = {i: (1.0, 0.5) for i in range(10)}
+    results[3] = (float("nan"), 0.5)       # held
+    results.pop(7)                          # missing
+    held = stitch.missing(results, 10)
+    assert held == [3, 7]
+    plan = replan(held, [1.0] * 10, 4)
+    covered = sorted(int(i) for i in plan.assignment.ravel() if i >= 0)
+    assert covered == [3, 7]
+
+
+def test_report_format(smallcrush):
+    rep = stitch.report(smallcrush, {0: (1.0, 0.5)}, "splitmix64", 1)
+    assert "MISSING/HELD" in rep            # 9 tests have no results
+    assert "splitmix64" in rep
