@@ -1,10 +1,16 @@
-"""Paper §11 main result: battery wall-time, sequential vs pool.
+"""Paper §11 main result: battery wall-time, sequential vs pool — plus the
+session API's compile-cache win.
 
 Paper numbers (for reference): BigCrush stock ~12 h -> parallel ~4 h ->
 HTCondor pool ~10.7 min (644 s) on 40 cores. Here: CPU-scaled batteries,
 sequential (1 worker, stock-TestU01 model) vs an 8-worker forced-device
 pool in a subprocess (the Condor model). Speedup structure, not absolute
 times, is the reproduction target.
+
+The session rows measure what the PoolSession compile cache buys: the
+first submit pays trace+compile, the second submit (same battery/scale/
+workers, DIFFERENT generator) reuses the jitted round program — generator
+and seed are runtime arguments.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ def _pool_run(battery, scale, workers):
     p = subprocess.run(
         [sys.executable, "-m", "repro.launch.battery", "--battery", battery,
          "--gen", "splitmix64", "--scale", str(scale), "--workers",
-         str(workers), "--mode", "roundrobin"],
+         str(workers), "--policy", "roundrobin"],
         env=env, capture_output=True, text=True)
     dt = time.time() - t0
     assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
@@ -29,6 +35,7 @@ def _pool_run(battery, scale, workers):
 
 
 def run(rows):
+    from repro.core.api import PoolSession, RunSpec
     from repro.core.battery import build_battery
     from repro.core.pool import run_sequential
     from repro.rng.generators import GEN_IDS
@@ -45,3 +52,18 @@ def run(rows):
         rows.append((f"battery_{battery}_pool_8w", pool * 1e6,
                      f"speedup_structure={seq / max(pool, 1e-9):.2f}x"
                      "(incl_process_startup)"))
+
+    # compile-cache: second submit with a new generator must not re-trace
+    session = PoolSession()
+    t0 = time.time()
+    session.submit(RunSpec("smallcrush", "splitmix64", 1,
+                           scale=0.125)).result()
+    cold = time.time() - t0
+    t0 = time.time()
+    session.submit(RunSpec("smallcrush", "pcg32", 1, scale=0.125)).result()
+    warm = time.time() - t0
+    rows.append(("battery_session_first_submit", cold * 1e6,
+                 "trace+compile+run"))
+    rows.append(("battery_session_cached_submit", warm * 1e6,
+                 f"speedup={cold / max(warm, 1e-9):.2f}x_"
+                 f"traces={session.total_traces}"))

@@ -1,22 +1,23 @@
 """End-to-end driver: BigCrush on an 8-worker pool with checkpoint/restart
-and hold/release — the paper's full `master` flow (§9, Appendix A).
+and hold/release — the paper's full `master` flow (§9, Appendix A), on the
+session API (submit / poll / held / release / result).
 
     PYTHONPATH=src python examples/bigcrush_pool.py
 
-Forces 8 host devices (must run before jax import), runs ~half the battery,
-"crashes", restarts from the checkpoint and finishes only the missing tests.
+Forces 8 host devices (must run before jax import), streams the battery
+round by round, "crashes", restarts from the checkpoint and finishes only
+the missing tests. The restart submit hits the session's compile cache —
+no re-trace of the round program.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
-import time                                           # noqa: E402
+import numpy as np                                    # noqa: E402
 
-from repro.core.battery import build_battery          # noqa: E402
-from repro.core.queue import run_battery              # noqa: E402
 from repro.ckpt import io as ckpt_io                  # noqa: E402
-from repro.launch.mesh import make_pool_mesh          # noqa: E402
+from repro.core.api import PoolSession, RunSpec       # noqa: E402
 
 CKPT = "/tmp/bigcrush_progress.ck"
 SCALE = 0.03125
@@ -24,27 +25,38 @@ SCALE = 0.03125
 if os.path.exists(CKPT):
     os.unlink(CKPT)
 
-mesh = make_pool_mesh()
-entries = build_battery("bigcrush", SCALE)
-print(f"pool: {mesh.devices.size} workers | BigCrush: {len(entries)} tests "
+session = PoolSession()
+spec = RunSpec("bigcrush", generators=("pcg32",), seeds=(7,), scale=SCALE,
+               checkpoint_path=CKPT)
+print(f"pool: {session.n_workers} workers | BigCrush: {spec.n_tests} tests "
       f"(scale {SCALE})")
 
-# --- phase 1: run, then simulate a crash after the checkpoint exists
-t0 = time.time()
-res1 = run_battery("bigcrush", "pcg32", 7, mesh, scale=SCALE,
-                   checkpoint_path=CKPT, progress=True)
-print(f"\nfirst run: {res1.rounds_run} rounds, {res1.wall_s:.1f}s")
+# --- phase 1: stream the run round by round (master polling `empty`),
+# then simulate a crash after the checkpoint exists
+run = session.submit(spec)
+for status in run.stream():
+    print(f"  round {status['rounds_run']}: {status['jobs_done']}/"
+          f"{status['jobs_total']} files generated", flush=True)
+if run.held():                                        # condor_release
+    run.release()
+res1 = run.result()
+print(f"\nfirst run: {res1.rounds_run} rounds, {res1.wall_s:.1f}s "
+      f"(traces: {session.total_traces})")
 
 # --- phase 2: knock three results out of the checkpoint ("node failures"),
-# restart, and watch only the missing tests re-run
-import numpy as np                                     # noqa: E402
+# restart, and watch only the missing tests re-run — on the CACHED program
 idx, st, pv = ckpt_io.load_flat(CKPT)
 keep = ~np.isin(idx, [5, 50, 100])
 ckpt_io.save(CKPT, [idx[keep], st[keep], pv[keep]])
-res2 = run_battery("bigcrush", "pcg32", 7, mesh, scale=SCALE,
-                   checkpoint_path=CKPT, progress=True)
+run2 = session.submit(spec)
+status = run2.status()
+print(f"restart: {status['jobs_total'] - status['jobs_done']} jobs missing, "
+      f"{run2.pending_rounds} round(s) planned")
+res2 = run2.result()
 print(f"restart re-ran {res2.rounds_run} round(s) for 3 lost tests "
-      f"(vs {res1.rounds_run} originally)")
+      f"(vs {res1.rounds_run} originally); traces still "
+      f"{session.total_traces} (compile cache hit)")
+assert session.total_traces == 1, "restart must reuse the jitted program"
 assert res2.results == res1.results, "restart must reconcile bitwise"
 print("restart results identical -- deterministic streams reconciled")
 print(res2.report.splitlines()[-1])

@@ -1,39 +1,56 @@
-"""Quickstart: test a generator with the battery (the paper's one-command
-flow), then peek at the substrate (scheduler, kernels, models).
+"""Quickstart: test generators with the battery (the paper's one-command
+flow) via the session API, then peek at the substrate (scheduler, kernels,
+models).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.queue import run_battery
+from repro.core.api import PoolSession, RunSpec
 from repro.core.scheduler import make_plan
-from repro.launch.mesh import make_pool_mesh
 
-# 1. run SmallCrush on a good and a known-bad generator (paper §10-11)
-mesh = make_pool_mesh()
-for gen in ("splitmix64", "randu"):
-    res = run_battery("smallcrush", gen, seed=42, mesh=mesh, scale=0.125)
-    verdict = "FAIL" if "SUSPECT" in res.report else "pass"
-    print(f"{gen:12s}: {verdict}  ({res.wall_s:.1f}s, "
-          f"{res.rounds_run} rounds)")
+# 1. one declarative spec, one dispatch per round: a good and a known-bad
+# generator assessed TOGETHER (the pool vmaps the job over the gen axis)
+session = PoolSession()
+spec = RunSpec("smallcrush", generators=("splitmix64", "randu"), seeds=(42,),
+               scale=0.125)
+res = session.submit(spec).result()
+for gen, run in res.runs.items():
+    verdict = "FAIL" if run.n_suspect else "pass"
+    print(f"{gen:12s}: {verdict}  ({run.wall_s:.1f}s, "
+          f"{run.rounds_run} rounds)")
+print(f"(one submit, {res.rounds_run} device dispatches, "
+      f"{session.total_traces} trace)")
 print()
 
-# 2. the paper's batch model: 106 BigCrush tests on various pool widths
+# 2. resubmitting against the same (battery, scale, workers) with the same
+# generator-count shape reuses the compiled round program — generator and
+# seed are runtime arguments (a different G would trace a new fan-out shape)
+res2 = session.submit(RunSpec("smallcrush", ("pcg32", "threefry"), 7,
+                              scale=0.125)).result()
+for gen, run in res2.runs.items():
+    print(f"{gen} via cache: {'FAIL' if run.n_suspect else 'pass'}")
+assert session.total_traces == 1, "second submit must reuse the jitted round"
+print(f"(still {session.total_traces} trace after "
+      f"{2 + len(res2.runs)} generator assessments)")
+print()
+
+# 3. the paper's batch model: 106 BigCrush tests on various pool widths
 for w in (40, 70, 90):
     plan = make_plan([1.0] * 106, w, "roundrobin")
     print(f"{w} workers -> {plan.rounds} batches (paper §11: 40->3, 70->2, "
           f"90->2)")
 print()
 
-# 3. the Pallas kernels validate against their oracles in interpret mode
+# 4. the Pallas kernels validate against their oracles in interpret mode
 from repro.kernels.gf2_rank.ops import rank32             # noqa: E402
 from repro.kernels.gf2_rank.ref import gf2_rank_ref       # noqa: E402
 mats = jax.random.bits(jax.random.PRNGKey(0), (64, 32), jnp.uint32)
 assert (rank32(mats) == gf2_rank_ref(mats)).all()
 print("gf2_rank kernel == oracle on 64 random 32x32 GF(2) matrices")
 
-# 4. every assigned architecture is one import away
+# 5. every assigned architecture is one import away
 from repro.configs import ARCH_IDS, get_config             # noqa: E402
 from repro.models.lm import count_params                   # noqa: E402
 for arch in ARCH_IDS:

@@ -1,7 +1,5 @@
 from repro.common.config import (  # noqa: F401
-    BATTERIES,
     HW,
-    BatteryConfig,
     HWConfig,
     MLAConfig,
     MoEConfig,

@@ -1,0 +1,48 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern JAX surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``, scoped
+``enable_x64`` inside traces). The pinned container ships jax 0.4.37,
+where those spell differently — and where a scoped ``enable_x64`` inside
+a jitted trace mis-lowers (u64 constants canonicalize to u32 at lowering
+time, outside the context). Everything that needs to differ by version
+lives here so the rest of the codebase writes against one API.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (<=0.4.x)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` without the ``axis_types`` kwarg on old jax."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def under_x64(fn):
+    """Call ``fn`` with the x64 context ambient for the WHOLE call —
+    trace, lowering, and execution see one consistent dtype config.
+    On jax<=0.4.x a scoped ``enable_x64`` that closes mid-trace truncates
+    uint64 constants during lowering; entering it around the outer call
+    (idempotent when already active) sidesteps that while keeping the
+    scoped uses in traced code valid on newer jax."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with jax.experimental.enable_x64():
+            return fn(*args, **kwargs)
+    return wrapper

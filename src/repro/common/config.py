@@ -1,8 +1,9 @@
 """Configuration dataclasses for CondorJAX.
 
 ``ModelConfig`` is the single source of truth for every assigned architecture;
-``ShapeConfig`` describes one (seq_len, global_batch, kind) input-shape cell;
-``BatteryConfig`` describes a TestU01-style battery (the paper's workload).
+``ShapeConfig`` describes one (seq_len, global_batch, kind) input-shape cell.
+TestU01-style batteries (the paper's workload) are described by
+``repro.core.api.RunSpec``.
 """
 from __future__ import annotations
 
@@ -174,21 +175,8 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
 
 
 # ---------------------------------------------------------------------------
-# battery (the paper's workload)
-
-
-@dataclasses.dataclass(frozen=True)
-class BatteryConfig:
-    name: str                          # smallcrush | crush | bigcrush
-    n_tests: int
-    scale: float = 1.0                 # sample-size multiplier vs. laptop baseline
-
-
-BATTERIES = {
-    "smallcrush": BatteryConfig("smallcrush", 10, 1.0),
-    "crush": BatteryConfig("crush", 96, 4.0),
-    "bigcrush": BatteryConfig("bigcrush", 106, 16.0),
-}
+# battery (the paper's workload): described by repro.core.api.RunSpec —
+# the old BatteryConfig/BATTERIES tables folded into RunSpec.preset().
 
 
 # Roofline hardware constants (TPU v5e-class; see system brief).

@@ -1,3 +1,18 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution — the orchestration SYSTEM.
+# Public surface: RunSpec / PoolSession / BatteryRun (repro.core.api),
+# schedule + retry policies (repro.core.policies). The classic
+# run_battery shim lives in repro.core.queue.
+from repro.core.api import (  # noqa: F401
+    BatteryResult,
+    BatteryRun,
+    PoolSession,
+    RunResult,
+    RunSpec,
+)
+from repro.core.policies import (  # noqa: F401
+    POLICIES,
+    RetryPolicy,
+    SchedulePolicy,
+    get_policy,
+    register_policy,
+)

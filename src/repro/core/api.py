@@ -1,0 +1,412 @@
+"""Unified public API: declarative ``RunSpec`` -> compile-once
+``PoolSession`` -> streaming ``BatteryRun``.
+
+The paper's orchestration layer (`master`/`makesub`/`condor_submit`/
+`empty`/`condor_release`/`superstitch`) as three first-class objects:
+
+  ``RunSpec``      a frozen, declarative description of one run — battery,
+                   scale, generator(s), seed(s), schedule policy, retry
+                   policy, checkpoint path. One spec fully determines the
+                   work; specs are hashable and comparable.
+  ``PoolSession``  owns the device mesh and a compile cache keyed on
+                   ``(battery, scale, n_workers, decomposition)``. The
+                   compiled round program takes generator and seed as
+                   runtime arguments, so repeated submits — different
+                   generators, different seeds, replans after
+                   hold/release — reuse the same jitted executable
+                   instead of re-tracing.
+  ``BatteryRun``   the submit handle, with HTCondor-shaped verbs:
+                   ``poll()`` advances/reports one round, ``held()``
+                   lists jobs with missing/invalid results, ``release()``
+                   replans them, ``result()`` drives to completion,
+                   ``stream()`` iterates per-round status. A spec with
+                   several generators fans out in ONE dispatch per round
+                   (the job is vmapped over a ``gen_ids`` axis).
+
+Typical use::
+
+    session = PoolSession()
+    spec = RunSpec("smallcrush", generators=("splitmix64", "pcg32"),
+                   seeds=(7,), scale=0.25)
+    result = session.submit(spec).result()
+    print(result.runs["pcg32"].report)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.ckpt import io as ckpt_io
+from repro.core import stitch
+from repro.core.battery import TestEntry, build_battery
+from repro.core.policies import RetryPolicy, SchedulePolicy, get_policy
+from repro.core.pool import make_fanout_runner, make_round_runner
+from repro.core.scheduler import replan
+from repro.rng.generators import GEN_IDS
+
+# Battery presets (the folded BatteryConfig from common/config.py):
+# test count and the sample-size multiplier of the paper-sized run.
+BATTERY_SIZES = {"smallcrush": 10, "crush": 96, "bigcrush": 106}
+DEFAULT_SCALES = {"smallcrush": 1.0, "crush": 4.0, "bigcrush": 16.0}
+
+
+# ---------------------------------------------------------------------------
+# RunSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Declarative description of one battery run.
+
+    ``generators`` may be a single name or a tuple; ``seeds`` broadcasts
+    (one seed shared by every generator) or pairs element-wise."""
+    battery: str
+    generators: Union[str, Tuple[str, ...]] = ("splitmix64",)
+    seeds: Union[int, Tuple[int, ...]] = (0,)
+    scale: float = 1.0
+    policy: Union[str, SchedulePolicy] = "lpt"
+    retry: RetryPolicy = RetryPolicy()
+    checkpoint_path: Optional[str] = None
+    progress: bool = False
+
+    def __post_init__(self):
+        if self.battery not in BATTERY_SIZES:
+            raise KeyError(f"unknown battery {self.battery!r}; "
+                           f"known: {sorted(BATTERY_SIZES)}")
+        gens = ((self.generators,) if isinstance(self.generators, str)
+                else tuple(self.generators))
+        for g in gens:
+            if g not in GEN_IDS:
+                raise KeyError(f"unknown generator {g!r}; "
+                               f"known: {sorted(GEN_IDS)}")
+        seeds = ((self.seeds,) if isinstance(self.seeds, int)
+                 else tuple(int(s) for s in self.seeds))
+        if len(seeds) == 1:
+            seeds = seeds * len(gens)
+        if len(seeds) != len(gens):
+            raise ValueError(
+                f"{len(seeds)} seeds for {len(gens)} generators "
+                "(give one seed, or one per generator)")
+        object.__setattr__(self, "generators", gens)
+        object.__setattr__(self, "seeds", seeds)
+        get_policy(self.policy)                  # validate early
+
+    @classmethod
+    def preset(cls, battery: str, **overrides) -> "RunSpec":
+        """Paper-sized spec for a battery (scale from DEFAULT_SCALES)."""
+        overrides.setdefault("scale", DEFAULT_SCALES[battery])
+        return cls(battery, **overrides)
+
+    @property
+    def n_tests(self) -> int:
+        return BATTERY_SIZES[self.battery]
+
+    @property
+    def n_generators(self) -> int:
+        return len(self.generators)
+
+
+# ---------------------------------------------------------------------------
+# results
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Per-generator outcome (the classic run_battery return shape)."""
+    results: Dict[int, tuple]       # test index -> (stat, p), combined
+    report: str
+    rounds_run: int
+    retries: int
+    wall_s: float
+    plan_rounds: int
+
+    @property
+    def n_suspect(self) -> int:
+        return self.report.count("SUSPECT")
+
+
+@dataclasses.dataclass
+class BatteryResult:
+    """Outcome of a (possibly multi-generator) submit."""
+    spec: RunSpec
+    runs: Dict[str, RunResult]      # generator name -> result
+    rounds_run: int
+    retries: int
+    wall_s: float
+
+    @property
+    def n_suspect(self) -> int:
+        return sum(r.n_suspect for r in self.runs.values())
+
+
+# ---------------------------------------------------------------------------
+# session + compile cache
+
+
+@dataclasses.dataclass
+class _Compiled:
+    """One compile-cache slot: job table + lazily built runners."""
+    entries: List[TestEntry]        # original battery (test space)
+    jobs: List[TestEntry]           # possibly decomposed (job space)
+    costs: List[float]
+    combine: str
+    runners: dict                   # n_generators -> jitted round fn
+
+
+class PoolSession:
+    """Owns the mesh and the compile cache. Build one session, submit many
+    specs; runs against the same ``(battery, scale, n_workers)`` share one
+    jitted round program (generator/seed are runtime arguments)."""
+
+    def __init__(self, mesh=None, n_workers: Optional[int] = None):
+        if mesh is None:
+            from repro.launch.mesh import make_pool_mesh
+            mesh = make_pool_mesh(n_workers)
+        self.mesh = mesh
+        self._cache: Dict[tuple, _Compiled] = {}
+        self.trace_counts: Dict[tuple, int] = {}
+
+    @property
+    def n_workers(self) -> int:
+        return int(self.mesh.devices.size)
+
+    @property
+    def total_traces(self) -> int:
+        return sum(self.trace_counts.values())
+
+    def cache_key(self, spec: RunSpec) -> tuple:
+        policy = get_policy(spec.policy)
+        return (spec.battery, float(spec.scale), self.n_workers,
+                policy.signature())
+
+    def _compiled(self, spec: RunSpec) -> _Compiled:
+        key = self.cache_key(spec)
+        hit = self._cache.get(key)
+        if hit is None:
+            entries = build_battery(spec.battery, spec.scale)
+            policy = get_policy(spec.policy)
+            jobs = policy.decompose(entries, self.n_workers) or entries
+            combine = getattr(policy, "combine", "stouffer")
+            hit = _Compiled(entries, jobs, [j.cost for j in jobs],
+                            combine, {})
+            self._cache[key] = hit
+        return hit
+
+    def _runner(self, spec: RunSpec):
+        """The jitted round program for this spec's shape (G generators)."""
+        key = self.cache_key(spec)
+        compiled = self._compiled(spec)
+        g = spec.n_generators
+        runner = compiled.runners.get(g)
+        if runner is None:
+            def on_trace():
+                self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+            make = make_round_runner if g == 1 else make_fanout_runner
+            runner = make(compiled.jobs, self.mesh, on_trace=on_trace)
+            compiled.runners[g] = runner
+        return runner
+
+    def entries(self, spec: RunSpec) -> List[TestEntry]:
+        """The spec's battery test table (test space, pre-decomposition) —
+        what ``RunResult.results`` keys refer to."""
+        return self._compiled(spec).entries
+
+    def submit(self, spec: RunSpec) -> "BatteryRun":
+        """condor_submit: plan the spec (resuming from its checkpoint if
+        one exists) and hand back the run handle. Compilation is lazy —
+        the first ``poll``/``result`` triggers it on a cache miss."""
+        return BatteryRun(self, spec)
+
+
+# ---------------------------------------------------------------------------
+# run handle
+
+
+class BatteryRun:
+    """Streaming handle for one submitted spec (HTCondor verbs)."""
+
+    def __init__(self, session: PoolSession, spec: RunSpec):
+        self.session = session
+        self.spec = spec
+        self._compiled = session._compiled(spec)
+        self._t0 = time.time()
+        self.rounds_run = 0
+        self.retries = 0
+        self.plan_rounds = 0
+        G = spec.n_generators
+        self._results: List[Dict[int, tuple]] = [dict() for _ in range(G)]
+        self._load_checkpoint()
+        self._queue: List[np.ndarray] = []
+        todo = self._missing()
+        if todo:
+            self._enqueue(todo, initial=True)
+
+    # -- planning ----------------------------------------------------------
+
+    def _missing(self) -> List[int]:
+        """Job-space HELD/missing set: union across generators (deterministic
+        streams make duplicate re-execution for the others free)."""
+        n = len(self._compiled.jobs)
+        held = set()
+        for res in self._results:
+            held.update(stitch.missing(res, n))
+        return sorted(held)
+
+    def _enqueue(self, todo: List[int], initial: bool = False) -> None:
+        costs = self._compiled.costs
+        w = self.session.n_workers
+        if initial and len(todo) == len(costs):
+            plan = get_policy(self.spec.policy).plan(costs, w)
+        else:
+            plan = replan(todo, costs, w, self.spec.policy)
+        self.plan_rounds = self.plan_rounds or plan.rounds
+        self._queue.extend(np.asarray(row, np.int32)
+                           for row in plan.assignment)
+
+    # -- HTCondor verbs ----------------------------------------------------
+
+    @property
+    def pending_rounds(self) -> int:
+        return len(self._queue)
+
+    @property
+    def done(self) -> bool:
+        return not self._queue and not self._missing()
+
+    def poll(self) -> dict:
+        """Advance one round (one device dispatch covering every generator)
+        and report status — the paper's `master` polling `empty`."""
+        if self._queue:
+            row = self._queue.pop(0)
+            self._dispatch(row)
+            self.rounds_run += 1
+            self._save_checkpoint()
+            if self.spec.progress:
+                done = self._jobs_done()
+                print(f"  round {self.rounds_run}: {done}/"
+                      f"{len(self._compiled.jobs)} files generated",
+                      flush=True)
+        return self.status()
+
+    def held(self) -> List[int]:
+        """Job indices with missing/invalid results once the current plan
+        is exhausted (paper: condor hold)."""
+        return [] if self._queue else self._missing()
+
+    def release(self) -> int:
+        """condor_release: replan the HELD set. Returns #jobs released."""
+        h = self.held()
+        if not h:
+            return 0
+        self.retries += 1
+        self._enqueue(h)
+        if self.spec.progress:
+            print(f"  {len(h)} held tests released for retry")
+        return len(h)
+
+    def stream(self) -> Iterator[dict]:
+        """Yield one status per round until the current plan drains."""
+        while self._queue:
+            yield self.poll()
+
+    def result(self) -> Union[RunResult, BatteryResult]:
+        """Drive to completion (rounds + hold/release retries) and stitch.
+        Returns ``RunResult`` for a single-generator spec, ``BatteryResult``
+        otherwise."""
+        while True:
+            while self._queue:
+                self.poll()
+            if not self.held() or self.retries >= self.spec.retry.max_retries:
+                break
+            self.release()
+        return self._finalize()
+
+    def status(self) -> dict:
+        state = ("done" if self.done
+                 else "running" if self._queue else "held")
+        return {"state": state, "jobs_done": self._jobs_done(),
+                "jobs_total": len(self._compiled.jobs),
+                "pending_rounds": len(self._queue),
+                "rounds_run": self.rounds_run, "retries": self.retries,
+                "held": self.held()}
+
+    # -- execution ---------------------------------------------------------
+
+    def _jobs_done(self) -> int:
+        return len(self._compiled.jobs) - len(self._missing())
+
+    def _dispatch(self, row: np.ndarray) -> None:
+        runner = self.session._runner(self.spec)
+        if self.spec.n_generators == 1:
+            stats, ps = runner(row, np.int32(self.spec.seeds[0]),
+                               np.int32(GEN_IDS[self.spec.generators[0]]))
+            per_gen = [(np.asarray(stats), np.asarray(ps))]
+        else:
+            seeds = np.asarray(self.spec.seeds, np.int32)
+            gids = np.asarray([GEN_IDS[g] for g in self.spec.generators],
+                              np.int32)
+            stats, ps = runner(row, seeds, gids)
+            stats, ps = np.asarray(stats), np.asarray(ps)
+            per_gen = [(stats[g], ps[g]) for g in range(len(gids))]
+        for g, (st, pv) in enumerate(per_gen):
+            self._results[g] = stitch.fold(row[None, :], st[None, :],
+                                           pv[None, :], self._results[g])
+
+    # -- checkpointing -----------------------------------------------------
+
+    def _save_checkpoint(self) -> None:
+        path = self.spec.checkpoint_path
+        if not path:
+            return
+        idx = np.array(sorted(set().union(*[set(r) for r in self._results])),
+                       np.int32)
+        st = np.array([[r.get(int(i), (np.nan, np.nan))[0] for i in idx]
+                       for r in self._results], np.float64)
+        pv = np.array([[r.get(int(i), (np.nan, np.nan))[1] for i in idx]
+                       for r in self._results], np.float64)
+        if self.spec.n_generators == 1:     # classic single-gen flat layout
+            ckpt_io.save(path, [idx, st[0], pv[0]])
+        else:
+            ckpt_io.save(path, [idx, st, pv])
+
+    def _load_checkpoint(self) -> None:
+        path = self.spec.checkpoint_path
+        if not (path and ckpt_io.exists(path)):
+            return
+        idx, st, pv = ckpt_io.load_flat(path)
+        st = np.atleast_2d(st)
+        pv = np.atleast_2d(pv)
+        if st.shape[0] != self.spec.n_generators:
+            raise ValueError(
+                f"checkpoint {path} holds {st.shape[0]} generator row(s), "
+                f"spec has {self.spec.n_generators}")
+        if len(idx) and int(np.max(idx)) >= len(self._compiled.jobs):
+            raise ValueError(
+                f"checkpoint {path} references job {int(np.max(idx))} but "
+                f"this spec's job table has {len(self._compiled.jobs)} "
+                "entries — it was written by a different battery/scale/"
+                "decomposition")
+        for g in range(st.shape[0]):
+            self._results[g] = {int(i): (float(s), float(p))
+                                for i, s, p in zip(idx, st[g], pv[g])}
+
+    # -- stitching ---------------------------------------------------------
+
+    def _finalize(self) -> Union[RunResult, BatteryResult]:
+        wall = time.time() - self._t0
+        runs: Dict[str, RunResult] = {}
+        for g, gen in enumerate(self.spec.generators):
+            combined = stitch.fold_groups(self._results[g],
+                                          self._compiled.jobs,
+                                          self._compiled.combine)
+            rep = stitch.report(self._compiled.entries, combined, gen,
+                                self.spec.seeds[g])
+            runs[gen] = RunResult(combined, rep, self.rounds_run,
+                                  self.retries, wall, self.plan_rounds)
+        if self.spec.n_generators == 1:
+            return runs[self.spec.generators[0]]
+        return BatteryResult(self.spec, runs, self.rounds_run, self.retries,
+                             wall)

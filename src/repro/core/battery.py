@@ -24,31 +24,45 @@ KERNEL_WEIGHT = {
 
 @dataclasses.dataclass(frozen=True)
 class TestEntry:
-    index: int
+    index: int                  # position in the pool's job table
     name: str
     kernel: Callable            # bits -> (stat, p)
     n_words: int                # uint32 words consumed
     cost: float                 # scheduler cost estimate
+    kname: str = ""             # kernel family (enables re-parameterization)
+    params: tuple = ()          # sorted (key, value) kernel kwargs
+    group: int = -1             # original battery test index (== index
+    #                             unless this entry is a sub-job)
+    part: int = 0               # sub-job position within its group
+    n_parts: int = 1            # group size (1 = not decomposed)
+
+    def __post_init__(self):
+        if self.group < 0:
+            object.__setattr__(self, "group", self.index)
+
+
+_WORDS = {
+    "birthday": lambda k: k.get("n", 4096),
+    "collision": lambda k: k.get("n", 65536),
+    "gap": lambda k: k.get("n", 65536),
+    "poker": lambda k: k.get("n", 32768) * 5,
+    "coupon": lambda k: k.get("n", 65536),
+    "maxoft": lambda k: k.get("n", 16384) * k.get("t", 8),
+    "weight": lambda k: k.get("n", 65536),
+    "rank": lambda k: k.get("n_mats", 1024) * 32,
+    "hamcorr": lambda k: k.get("n", 65536),
+    "serial2d": lambda k: k.get("n", 65536) * 2,
+}
 
 
 def _mk(index, kname, scale, **kw):
     fn = T.KERNELS[kname]
-    words = {
-        "birthday": lambda k: k.get("n", 4096),
-        "collision": lambda k: k.get("n", 65536),
-        "gap": lambda k: k.get("n", 65536),
-        "poker": lambda k: k.get("n", 32768) * 5,
-        "coupon": lambda k: k.get("n", 65536),
-        "maxoft": lambda k: k.get("n", 16384) * k.get("t", 8),
-        "weight": lambda k: k.get("n", 65536),
-        "rank": lambda k: k.get("n_mats", 1024) * 32,
-        "hamcorr": lambda k: k.get("n", 65536),
-        "serial2d": lambda k: k.get("n", 65536) * 2,
-    }[kname](kw)
+    words = _WORDS[kname](kw)
     name = kname + ("" if not kw else "_" + "_".join(
         f"{a}{v}" for a, v in sorted(kw.items())))
     return TestEntry(index, name, functools.partial(fn, **kw), words,
-                     words * KERNEL_WEIGHT[kname] * scale)
+                     words * KERNEL_WEIGHT[kname] * scale,
+                     kname=kname, params=tuple(sorted(kw.items())))
 
 
 _BASE = [  # SmallCrush: one instance of each kernel (explicit params so
@@ -133,3 +147,35 @@ def build_battery(name: str, scale: float = 1.0) -> List[TestEntry]:
 
 def max_words(entries: List[TestEntry]) -> int:
     return max(e.n_words for e in entries)
+
+
+def split_entry(entry: TestEntry, n_parts: int,
+                start_index: int = 0) -> List[TestEntry]:
+    """Over-decomposition: split one test into ``n_parts`` sub-jobs.
+
+    Each sub-job is the same kernel re-parameterized lambda-invariantly at
+    1/n_parts of the sample size (via ``_scaled``, so Poisson-regime tests
+    keep their calibration) and draws its own disjoint generator sub-stream
+    (see ``pool.stream_table``). The stitcher later folds the group's
+    sub-p-values back into one verdict (Stouffer/Fisher combine).
+
+    If the re-parameterization cannot actually shrink the test (parameter
+    floors), the entry is returned unsplit — a sub-job as heavy as the
+    original mitigates nothing.
+    """
+    if n_parts <= 1 or not entry.kname:
+        return [dataclasses.replace(entry, index=start_index)]
+    sub_kw = _scaled(dict(entry.params), entry.kname, 1.0 / n_parts)
+    sub_words = _WORDS[entry.kname](sub_kw)
+    if sub_words >= entry.n_words:                  # floors won: no shrink
+        return [dataclasses.replace(entry, index=start_index)]
+    fn = T.KERNELS[entry.kname]
+    sub_cost = entry.cost * (sub_words / max(entry.n_words, 1))
+    return [
+        TestEntry(start_index + p,
+                  f"{entry.name}[{p + 1}/{n_parts}]",
+                  functools.partial(fn, **sub_kw), sub_words, sub_cost,
+                  kname=entry.kname, params=tuple(sorted(sub_kw.items())),
+                  group=entry.group, part=p, n_parts=n_parts)
+        for p in range(n_parts)
+    ]

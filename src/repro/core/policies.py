@@ -1,0 +1,207 @@
+"""Schedule + retry policies for the battery pool.
+
+The paper's `makesub` hard-codes one placement (round-robin over the
+condor slot list). Here placement is a registered ``SchedulePolicy``:
+
+  roundrobin      the paper's batch model — ceil(K/W) batches (§11)
+  lpt             longest-processing-time first; strictly better makespan
+                  whenever test costs are skewed (TestU01's are)
+  over_decompose  straggler mitigation at plan level: the heaviest tests'
+                  sample ranges are split into sub-jobs (fresh sub-streams,
+                  lambda-invariant re-parameterization), scheduled with LPT,
+                  and the stitcher folds each group's sub-results back into
+                  one verdict via a Stouffer/Fisher p-value combine.
+
+Policies are host-side and pure: ``plan`` maps (costs, workers) to a
+``Plan``; ``decompose`` (optional) maps the battery's job table to an
+expanded one. Only decomposition changes the compiled pool program, so
+``PoolSession`` keys its compile cache on the decomposition signature,
+not the plan mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# plan
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    assignment: np.ndarray          # (rounds, workers) int32 job index, -1 idle
+    mode: str
+    est_makespan: float             # sum over rounds of max worker cost
+    est_ideal: float                # sum(costs)/W lower bound
+
+    @property
+    def rounds(self) -> int:
+        return self.assignment.shape[0]
+
+
+def _roundrobin_plan(costs: np.ndarray, n_workers: int) -> np.ndarray:
+    k = len(costs)
+    rounds = -(-k // n_workers)
+    a = np.full((rounds, n_workers), -1, np.int32)
+    for i in range(k):
+        a[i // n_workers, i % n_workers] = i
+    return a
+
+
+def _lpt_plan(costs: np.ndarray, n_workers: int) -> np.ndarray:
+    order = np.argsort(-costs)
+    loads = np.zeros(n_workers)
+    lists: List[List[int]] = [[] for _ in range(n_workers)]
+    for i in order:
+        w = int(np.argmin(loads))
+        loads[w] += costs[i]
+        lists[w].append(int(i))
+    rounds = max(len(l) for l in lists)
+    a = np.full((rounds, n_workers), -1, np.int32)
+    for w, l in enumerate(lists):
+        for r, i in enumerate(l):
+            a[r, w] = i
+    return a
+
+
+def _finish_plan(a: np.ndarray, costs: np.ndarray, n_workers: int,
+                 mode: str) -> Plan:
+    per_round = np.where(a >= 0, costs[np.clip(a, 0, None)], 0.0)
+    est = float(per_round.max(axis=1).sum())
+    return Plan(a, mode, est, float(costs.sum() / n_workers))
+
+
+# ---------------------------------------------------------------------------
+# policy protocol + registry
+
+
+@runtime_checkable
+class SchedulePolicy(Protocol):
+    """Placement strategy. ``decompose`` returning None means the job
+    table is the battery's entry list unchanged."""
+    name: str
+
+    def plan(self, costs: Sequence[float], n_workers: int) -> Plan:
+        ...
+
+    def decompose(self, entries, n_workers: int) -> Optional[list]:
+        ...
+
+    def signature(self) -> Optional[tuple]:
+        """Compile-cache key component: None unless decomposition changes
+        the compiled job table."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinPolicy:
+    name: str = "roundrobin"
+
+    def plan(self, costs, n_workers):
+        costs = np.asarray(costs, np.float64)
+        return _finish_plan(_roundrobin_plan(costs, n_workers), costs,
+                            n_workers, self.name)
+
+    def decompose(self, entries, n_workers):
+        return None
+
+    def signature(self):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class LPTPolicy:
+    name: str = "lpt"
+
+    def plan(self, costs, n_workers):
+        costs = np.asarray(costs, np.float64)
+        return _finish_plan(_lpt_plan(costs, n_workers), costs, n_workers,
+                            self.name)
+
+    def decompose(self, entries, n_workers):
+        return None
+
+    def signature(self):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class OverDecomposePolicy:
+    """Split any test whose cost exceeds ``threshold`` x the battery's mean
+    test cost into up to ``max_parts`` sub-jobs, then LPT-pack the expanded
+    table. The cut is deliberately a function of the battery alone (NOT of
+    ``n_workers``): the job table — and with it checkpoint job indices and
+    sub-stream ids — stays identical across mesh widths, so a checkpointed
+    run resumes correctly after elastic re-meshing. Sub-jobs draw fresh,
+    disjoint generator sub-streams and are re-parameterized
+    lambda-invariantly (see battery.split_entry), so each sub-result is a
+    valid p-value; the stitcher combines a group's sub-p-values with
+    ``combine`` ('stouffer' keeps both tails, 'fisher' is small-p
+    sensitive)."""
+    name: str = "over_decompose"
+    max_parts: int = 8
+    threshold: float = 1.0
+    combine: str = "stouffer"
+
+    def plan(self, costs, n_workers):
+        costs = np.asarray(costs, np.float64)
+        return _finish_plan(_lpt_plan(costs, n_workers), costs, n_workers,
+                            self.name)
+
+    def decompose(self, entries, n_workers=None):
+        from repro.core.battery import split_entry
+        costs = np.asarray([e.cost for e in entries], np.float64)
+        cut = self.threshold * max(float(costs.mean()), 1e-12)
+        jobs = []
+        for e in entries:
+            parts = 1
+            if e.cost > cut:
+                parts = min(self.max_parts, max(int(np.ceil(e.cost / cut)), 2))
+            subs = split_entry(e, parts, start_index=len(jobs))
+            jobs.extend(subs)
+        if len(jobs) == len(entries):           # nothing split
+            return None
+        return jobs
+
+    def signature(self):
+        return (self.name, self.max_parts, self.threshold)
+
+
+POLICIES: Dict[str, SchedulePolicy] = {}
+
+
+def register_policy(policy: SchedulePolicy) -> SchedulePolicy:
+    POLICIES[policy.name] = policy
+    return policy
+
+
+register_policy(RoundRobinPolicy())
+register_policy(LPTPolicy())
+register_policy(OverDecomposePolicy())
+
+
+def get_policy(policy: Union[str, SchedulePolicy]) -> SchedulePolicy:
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown schedule policy {policy!r}; "
+                f"registered: {sorted(POLICIES)}") from None
+    if isinstance(policy, SchedulePolicy):
+        return policy
+    raise TypeError(f"not a SchedulePolicy: {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# retry
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """hold/release discipline: how many release passes the driver grants
+    before HELD jobs are reported as missing (paper: condor_release)."""
+    max_retries: int = 2

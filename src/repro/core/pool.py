@@ -3,24 +3,51 @@
 One compiled program covers the whole battery: a worker's round executes
 ``lax.switch`` over the uniform job table (every test kernel has signature
 ``bits -> (stat, p)``), with the job's bit-stream derived from
-``(seed, test_id)`` — fresh-generator-per-test semantics (paper §4.1).
+``(seed, stream_table[job_id])`` — fresh-generator-per-test semantics
+(paper §4.1). For a plain battery the stream table is the identity, so
+results are bitwise those of the classic path; over-decomposed sub-jobs
+get disjoint sub-streams (``group + n_groups * part``) that are stable
+across pool width and schedule, which keeps hold/release and speculative
+re-execution reconcilable.
 
-``run_round`` dispatches ONE round across workers via ``shard_map`` (the
-paper's "submit a batch, wait for output files"); the host driver in
-``core/queue.py`` loops rounds so progress is checkpointable between
-batches, exactly like the paper's `master` polling `empty`.
+Three compiled shapes, all pure functions of the job table (generator and
+seed are runtime arguments — the same executable serves every generator,
+which is what ``PoolSession``'s compile cache exploits):
+
+  ``make_round_runner``   one round across workers via ``shard_map`` (the
+                          paper's "submit a batch, wait for output files");
+                          the host driver in ``core/api.py`` loops rounds so
+                          progress is checkpointable between batches.
+  ``make_fanout_runner``  the same round vmapped over a ``gen_ids`` axis —
+                          G generators assessed in ONE dispatch (multi-
+                          generator batteries, Wartel & Hill-style).
+  ``make_batch_runner``   whole plan in one dispatch (benchmarks).
+
+``on_trace`` (when given) fires once per trace of the round body; the
+session uses it to assert/count cache behaviour.
 """
 from __future__ import annotations
 
 import functools
-from typing import List
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map, under_x64
 from repro.core.battery import TestEntry, max_words
 from repro.rng.generators import gen_block_by_id, x64
+
+
+def stream_table(entries: List[TestEntry]) -> np.ndarray:
+    """Per-job generator stream ids. Identity for an unsplit battery;
+    sub-jobs get ``group + n_groups * part`` — unique, deterministic, and
+    independent of worker count or plan."""
+    n_groups = max(e.group for e in entries) + 1
+    return np.asarray([e.group + n_groups * e.part for e in entries],
+                      np.int32)
 
 
 def _job_fn(entries: List[TestEntry], n_words: int):
@@ -29,30 +56,54 @@ def _job_fn(entries: List[TestEntry], n_words: int):
         jnp.asarray(v, jnp.float32) for v in e.kernel(bits))
         for e in entries]
     branches.append(lambda bits: (jnp.float32(0.0), jnp.float32(jnp.nan)))
+    streams = jnp.asarray(stream_table(entries))
 
     def run(job_id, seed, gen_id):
+        stream = streams[jnp.clip(job_id, 0, len(entries) - 1)]
         with x64():
-            bits = gen_block_by_id(gen_id, seed, jnp.maximum(job_id, 0),
-                                   n_words)
+            bits = gen_block_by_id(gen_id, seed, stream, n_words)
         idx = jnp.where(job_id < 0, len(entries), job_id)
         return jax.lax.switch(jnp.clip(idx, 0, len(entries)), branches, bits)
 
     return run
 
 
-def make_round_runner(entries: List[TestEntry], mesh):
+def make_round_runner(entries: List[TestEntry], mesh,
+                      on_trace: Optional[Callable[[], None]] = None):
     """Compiled fn: (round_assignment (W,), seed, gen_id) -> stats, ps (W,)."""
     n_words = max_words(entries)
     job = _job_fn(entries, n_words)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(P("workers"), P(), P()),
+        shard_map, mesh=mesh, in_specs=(P("workers"), P(), P()),
         out_specs=(P("workers"), P("workers")), check_vma=False)
     def round_fn(jobs, seed, gen_id):
+        if on_trace is not None:
+            on_trace()
         stat, p = job(jobs[0], seed, gen_id)
         return stat[None], p[None]
 
-    return jax.jit(round_fn)
+    return under_x64(jax.jit(round_fn))
+
+
+def make_fanout_runner(entries: List[TestEntry], mesh,
+                       on_trace: Optional[Callable[[], None]] = None):
+    """Multi-generator round: (round_assignment (W,), seeds (G,),
+    gen_ids (G,)) -> stats, ps (G, W). The job is vmapped over the
+    generator axis, so G generators are assessed in one device dispatch."""
+    n_words = max_words(entries)
+    job = _job_fn(entries, n_words)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P("workers"), P(), P()),
+        out_specs=(P(None, "workers"), P(None, "workers")), check_vma=False)
+    def round_fn(jobs, seeds, gen_ids):
+        if on_trace is not None:
+            on_trace()
+        stat, p = jax.vmap(lambda s, g: job(jobs[0], s, g))(seeds, gen_ids)
+        return stat[:, None], p[:, None]
+
+    return under_x64(jax.jit(round_fn))
 
 
 def make_batch_runner(entries: List[TestEntry], mesh):
@@ -63,7 +114,7 @@ def make_batch_runner(entries: List[TestEntry], mesh):
     job = _job_fn(entries, n_words)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(P(None, "workers"), P(), P()),
+        shard_map, mesh=mesh, in_specs=(P(None, "workers"), P(), P()),
         out_specs=(P(None, "workers"), P(None, "workers")), check_vma=False)
     def plan_fn(jobs, seed, gen_id):
         def body(_, jid):
@@ -72,7 +123,7 @@ def make_batch_runner(entries: List[TestEntry], mesh):
         _, (stats, ps) = jax.lax.scan(body, 0, jobs)
         return stats[:, None], ps[:, None]
 
-    return jax.jit(plan_fn)
+    return under_x64(jax.jit(plan_fn))
 
 
 def run_sequential(entries: List[TestEntry], seed: int, gen_id: int):
@@ -89,4 +140,5 @@ def run_sequential(entries: List[TestEntry], seed: int, gen_id: int):
             body, 0, jnp.arange(len(entries), dtype=jnp.int32))
         return stats, ps
 
-    return go(jnp.asarray(seed), jnp.asarray(gen_id))
+    return under_x64(go)(jnp.asarray(seed, jnp.int32),
+                         jnp.asarray(gen_id, jnp.int32))

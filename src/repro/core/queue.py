@@ -1,94 +1,34 @@
-"""Battery driver — the paper's `master` script as a Python API.
+"""Classic functional battery driver — now a thin shim over the session API.
 
-Lifecycle per run (mirrors master/makesub/condor_submit/empty/release/
-superstitch, paper §9 + Appendix A):
-
-  1. plan      = make_plan(costs, W)          (makesub)
-  2. per round: dispatch round_runner          (condor_submit, one batch)
-  3. fold results, checkpoint progress         (empty + checkpoint)
-  4. held = invalid/missing results -> replan  (condor_release)
-  5. stitch report                             (superstitch)
-
-Restart: if a progress checkpoint exists, completed tests are not re-run —
-only the missing bitmap is scheduled (Condor standard-universe checkpoint
-semantics at the plan level). Deterministic (seed, test_id) streams make
-re-execution and speculative duplicates bitwise reconcilable.
+``run_battery(battery, gen, seed, mesh, ...)`` survives for callers that
+think in strings and kwargs; it builds the equivalent declarative
+``RunSpec``, submits it to a throwaway ``PoolSession``, and drives the
+handle to completion. Everything the old driver did by hand — plan,
+dispatch rounds, fold + checkpoint, hold/release, stitch (the paper's
+master/makesub/condor_submit/empty/condor_release/superstitch loop) —
+lives in ``repro.core.api`` now. Use that module directly when you want
+the compile cache across runs, multi-generator fan-out, or streaming
+per-round results.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, Optional
+from typing import Optional, Union
 
-import numpy as np
-
-from repro.ckpt import io as ckpt_io
-from repro.core import stitch
-from repro.core.battery import build_battery
-from repro.core.pool import make_round_runner
-from repro.core.scheduler import make_plan, replan
-from repro.rng.generators import GEN_IDS
-
-
-@dataclasses.dataclass
-class RunResult:
-    results: Dict[int, tuple]
-    report: str
-    rounds_run: int
-    retries: int
-    wall_s: float
-    plan_rounds: int
+from repro.core.api import (  # noqa: F401  (RunResult re-exported for compat)
+    BatteryResult,
+    PoolSession,
+    RunResult,
+    RunSpec,
+)
+from repro.core.policies import RetryPolicy, SchedulePolicy
 
 
 def run_battery(battery: str, gen: str, seed: int, mesh,
-                scale: float = 1.0, mode: str = "lpt",
+                scale: float = 1.0,
+                mode: Union[str, SchedulePolicy] = "lpt",
                 checkpoint_path: Optional[str] = None,
                 max_retries: int = 2, progress: bool = False) -> RunResult:
-    t0 = time.time()
-    entries = build_battery(battery, scale)
-    n_workers = mesh.devices.size
-    costs = [e.cost for e in entries]
-
-    results: Dict[int, tuple] = {}
-    if checkpoint_path and ckpt_io.exists(checkpoint_path):
-        idx, st, pv = ckpt_io.load_flat(checkpoint_path)
-        results = {int(i): (float(s), float(p))
-                   for i, s, p in zip(idx, st, pv)}
-
-    todo = stitch.missing(results, len(entries))
-    runner = make_round_runner(entries, mesh)
-    gen_id = np.int32(GEN_IDS[gen])
-    rounds_run = 0
-    retries = 0
-    plan_rounds = 0
-
-    while todo and retries <= max_retries:
-        plan = (make_plan(costs, n_workers, mode) if len(todo) == len(entries)
-                and not retries else replan(todo, costs, n_workers, mode))
-        plan_rounds = plan_rounds or plan.rounds
-        for r in range(plan.rounds):
-            row = np.asarray(plan.assignment[r], np.int32)
-            stats, ps = runner(row, np.int32(seed), gen_id)
-            results = stitch.fold(row[None, :], np.asarray(stats)[None, :],
-                                  np.asarray(ps)[None, :], results)
-            rounds_run += 1
-            if checkpoint_path:
-                idx = np.array(sorted(results), np.int32)
-                st = np.array([results[i][0] for i in idx], np.float64)
-                pv = np.array([results[i][1] for i in idx], np.float64)
-                ckpt_io.save(checkpoint_path, [idx, st, pv])
-            if progress:
-                done = len(entries) - len(stitch.missing(results,
-                                                         len(entries)))
-                print(f"  round {rounds_run}: {done}/{len(entries)} "
-                      f"files generated", flush=True)
-        held = stitch.missing(results, len(entries))
-        if held:
-            retries += 1                              # condor_release
-            if progress:
-                print(f"  {len(held)} held tests released for retry")
-        todo = held
-
-    rep = stitch.report(entries, results, gen, seed)
-    return RunResult(results, rep, rounds_run, retries, time.time() - t0,
-                     plan_rounds)
+    spec = RunSpec(battery, generators=(gen,), seeds=(seed,), scale=scale,
+                   policy=mode, retry=RetryPolicy(max_retries=max_retries),
+                   checkpoint_path=checkpoint_path, progress=progress)
+    return PoolSession(mesh=mesh).submit(spec).result()

@@ -1,69 +1,35 @@
-"""Pool scheduler — the paper's batch model, plus the LPT improvement.
+"""Pool scheduler — the paper's batch model behind a policy registry.
 
 The paper observed: K independent tests on W workers finish in ceil(K/W)
 batches, each batch costing ~t_max (§11: 106 tests / 40 cores -> 3 batches
 ~= 11 min; 70 cores -> 2; 90 cores -> still 2). ``roundrobin`` reproduces
-exactly that placement. ``lpt`` (longest-processing-time first) packs by the
-per-test cost estimates and is the beyond-paper scheduler: same result
-values (streams are order-independent), strictly better makespan whenever
-test costs are skewed — which TestU01's are.
-
-``over_decompose`` splits the heaviest tests' sample ranges into sub-jobs
-(straggler mitigation at plan level; the stitcher folds sub-results).
+exactly that placement; ``lpt`` and ``over_decompose`` are the beyond-paper
+schedulers. The actual placement algorithms now live in
+``repro.core.policies`` as registered ``SchedulePolicy`` objects — this
+module keeps the classic functional surface (``make_plan``/``replan``)
+as a thin delegate for callers that think in mode strings.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Sequence
+from typing import Sequence, Union
 
 import numpy as np
 
-
-@dataclasses.dataclass(frozen=True)
-class Plan:
-    assignment: np.ndarray          # (rounds, workers) int32 test index, -1 idle
-    mode: str
-    est_makespan: float             # sum over rounds of max worker cost
-    est_ideal: float                # sum(costs)/W lower bound
-
-    @property
-    def rounds(self) -> int:
-        return self.assignment.shape[0]
+from repro.core.policies import (  # noqa: F401  (re-exported for compat)
+    Plan,
+    SchedulePolicy,
+    get_policy,
+)
 
 
 def make_plan(costs: Sequence[float], n_workers: int,
-              mode: str = "roundrobin") -> Plan:
-    k = len(costs)
-    costs = np.asarray(costs, np.float64)
-    if mode == "roundrobin":
-        rounds = -(-k // n_workers)
-        a = np.full((rounds, n_workers), -1, np.int32)
-        for i in range(k):
-            a[i // n_workers, i % n_workers] = i
-    elif mode == "lpt":
-        order = np.argsort(-costs)
-        loads = np.zeros(n_workers)
-        lists: List[List[int]] = [[] for _ in range(n_workers)]
-        for i in order:
-            w = int(np.argmin(loads))
-            loads[w] += costs[i]
-            lists[w].append(int(i))
-        rounds = max(len(l) for l in lists)
-        a = np.full((rounds, n_workers), -1, np.int32)
-        for w, l in enumerate(lists):
-            for r, i in enumerate(l):
-                a[r, w] = i
-    else:
-        raise ValueError(mode)
-
-    per_round = np.where(a >= 0, costs[np.clip(a, 0, None)], 0.0)
-    est = float(per_round.max(axis=1).sum())
-    return Plan(a, mode, est, float(costs.sum() / n_workers))
+              mode: Union[str, SchedulePolicy] = "roundrobin") -> Plan:
+    return get_policy(mode).plan(costs, n_workers)
 
 
 def replan(missing: Sequence[int], costs: Sequence[float],
-           n_workers: int, mode: str = "lpt") -> Plan:
-    """Plan covering only `missing` test indices (hold/release retry rounds,
+           n_workers: int, mode: Union[str, SchedulePolicy] = "lpt") -> Plan:
+    """Plan covering only `missing` job indices (hold/release retry rounds,
     and elastic re-meshing after worker loss: same call, smaller W)."""
     sub = make_plan([costs[i] for i in missing], n_workers, mode)
     remap = np.asarray(list(missing) + [-1], np.int32)

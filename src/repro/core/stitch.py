@@ -3,15 +3,40 @@
 The paper's `superstitch` concatenated 11..107 output files into
 results.txt and pulled the per-test summaries into stats.txt; here the
 "files" are the (rounds, workers) result arrays plus the plan that maps
-slots back to test indices. Suspicious p-values are flagged with TestU01's
-convention (outside [eps, 1-eps])."""
+slots back to job indices. When the schedule policy over-decomposed a
+test into sub-jobs, ``fold_groups`` combines each group's sub-p-values
+back into one per-test verdict (Stouffer by default — keeps both tails —
+or Fisher). Suspicious p-values are flagged with TestU01's convention
+(outside [eps, 1-eps])."""
 from __future__ import annotations
 
 from typing import Dict, List
 
 import numpy as np
+from scipy import special as sps
 
 SUSPECT_P = 1e-4
+_P_FLOOR = 1e-15
+
+
+def combine_stouffer(ps) -> tuple:
+    """(stat, p): Z = sum(Phi^-1(1-p_i)) / sqrt(m), p = 1 - Phi(Z).
+    Direction-preserving — p near 0 AND p near 1 both survive the fold,
+    which the two-sided suspect rule needs."""
+    ps = np.clip(np.asarray(ps, np.float64), _P_FLOOR, 1.0 - 1e-12)
+    z = sps.ndtri(1.0 - ps)
+    stat = float(z.sum() / np.sqrt(len(ps)))
+    return stat, float(sps.ndtr(-stat))
+
+
+def combine_fisher(ps) -> tuple:
+    """(stat, p): stat = -2 sum(ln p_i) ~ chi2_{2m}; small-p sensitive."""
+    ps = np.clip(np.asarray(ps, np.float64), _P_FLOOR, 1.0)
+    stat = float(-2.0 * np.log(ps).sum())
+    return stat, float(sps.gammaincc(len(ps), stat / 2.0))
+
+
+COMBINERS = {"stouffer": combine_stouffer, "fisher": combine_fisher}
 
 
 def fold(plan_assignment: np.ndarray, stats: np.ndarray, ps: np.ndarray,
@@ -35,6 +60,36 @@ def missing(results: Dict[int, tuple], n_tests: int) -> List[int]:
         stat, p = results[i]
         if not (np.isfinite(stat) and np.isfinite(p) and 0.0 <= p <= 1.0):
             out.append(i)
+    return out
+
+
+def fold_groups(job_results: Dict[int, tuple], jobs,
+                combine: str = "stouffer") -> Dict[int, tuple]:
+    """Map job-space results back to test-space: {entry.group: (stat, p)}.
+
+    Unsplit jobs pass through untouched (bitwise — no combine applied), so
+    non-decomposing policies see exactly the classic fold. A group with any
+    missing/invalid sub-result stays missing (the whole test is HELD)."""
+    groups: Dict[int, list] = {}
+    for j in jobs:
+        groups.setdefault(j.group, []).append(j)
+    fold_fn = COMBINERS[combine]
+    out: Dict[int, tuple] = {}
+    for g, js in groups.items():
+        if len(js) == 1 and js[0].n_parts == 1:
+            if js[0].index in job_results:
+                out[g] = job_results[js[0].index]
+            continue
+        ps = []
+        ok = True
+        for j in sorted(js, key=lambda j: j.part):
+            sp = job_results.get(j.index)
+            if sp is None or not np.isfinite(sp[1]):
+                ok = False
+                break
+            ps.append(sp[1])
+        if ok:
+            out[g] = fold_fn(ps)
     return out
 
 

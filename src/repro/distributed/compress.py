@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
+
 
 def quantize_int8(x):
     """Per-tensor symmetric int8. Returns (q, scale)."""
@@ -50,7 +52,7 @@ def cross_pod_mean(grads, mesh):
         return grads
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=jax.tree_util.tree_map(lambda _: P("pod"), grads),
         out_specs=jax.tree_util.tree_map(lambda _: P("pod"), grads),
         check_vma=False)

@@ -1,14 +1,18 @@
-"""One-command battery CLI — the paper's `master` script.
+"""One-command battery CLI — the paper's `master` script on the session API.
 
   PYTHONPATH=src python -m repro.launch.battery \
       --battery bigcrush --gen splitmix64 --workers 8 --scale 0.05
 
+``--gen`` takes a comma-separated list: several generators are assessed in
+ONE dispatch per round (the pool vmaps the job over a gen_ids axis).
 Set ``--workers N`` (>1) to fork the pool onto N forced host devices (the
 dry-run trick, battery-sized); on a real TPU pod the same code runs on the
 flattened device mesh. Checkpoints progress per round; re-running the same
-command resumes (only missing tests execute).
+command resumes (only missing tests execute). ``--json PATH`` writes a
+machine-readable report next to the text one.
 """
 import argparse
+import json
 import os
 import sys
 
@@ -17,32 +21,76 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--battery", default="smallcrush",
                     choices=["smallcrush", "crush", "bigcrush"])
-    ap.add_argument("--gen", default="splitmix64")
+    ap.add_argument("--gen", default="splitmix64",
+                    help="generator name, or comma-separated list for "
+                         "multi-generator fan-out in one dispatch")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
-    ap.add_argument("--mode", default="lpt", choices=["lpt", "roundrobin"])
+    ap.add_argument("--policy", "--mode", dest="policy", default="lpt",
+                    choices=["lpt", "roundrobin", "over_decompose"])
+    ap.add_argument("--retries", type=int, default=2)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write a machine-readable report to this path")
     args = ap.parse_args()
 
     if args.workers > 1 and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = \
             f"--xla_force_host_platform_device_count={args.workers}"
 
-    from repro.core.queue import run_battery          # noqa: E402 (after env)
+    from repro.core import stitch                     # noqa: E402 (after env)
+    from repro.core.api import (                      # noqa: E402
+        BatteryResult, PoolSession, RunSpec)
+    from repro.core.policies import RetryPolicy       # noqa: E402
     from repro.launch.mesh import make_pool_mesh      # noqa: E402
 
-    mesh = make_pool_mesh(args.workers or None)
-    print(f"pool: {mesh.devices.size} workers | battery={args.battery} "
-          f"gen={args.gen} scale={args.scale} mode={args.mode}")
-    res = run_battery(args.battery, args.gen, args.seed, mesh,
-                      scale=args.scale, mode=args.mode,
-                      checkpoint_path=args.ckpt, progress=True)
-    print(res.report)
+    gens = tuple(g.strip() for g in args.gen.split(",") if g.strip())
+    session = PoolSession(mesh=make_pool_mesh(args.workers or None))
+    spec = RunSpec(args.battery, generators=gens, seeds=(args.seed,),
+                   scale=args.scale, policy=args.policy,
+                   retry=RetryPolicy(max_retries=args.retries),
+                   checkpoint_path=args.ckpt, progress=True)
+    print(f"pool: {session.n_workers} workers | battery={args.battery} "
+          f"gen={','.join(gens)} scale={args.scale} policy={args.policy}")
+
+    res = session.submit(spec).result()
+    multi = isinstance(res, BatteryResult)
+    runs = res.runs if multi else {gens[0]: res}
+    for run in runs.values():
+        print(run.report)
     print(f"\nwall={res.wall_s:.1f}s rounds={res.rounds_run} "
           f"retries={res.retries}")
-    suspects = res.report.count("SUSPECT")
+
+    if args.json_path:
+        entries = session.entries(spec)
+        payload = {
+            "battery": args.battery, "scale": args.scale,
+            "workers": session.n_workers, "policy": args.policy,
+            "seed": args.seed, "wall_s": round(res.wall_s, 3),
+            "rounds_run": res.rounds_run, "retries": res.retries,
+            "runs": {},
+        }
+        for gen, run in runs.items():
+            tests = []
+            for e in entries:
+                stat, p = run.results.get(e.index, (None, None))
+                suspect = (p is not None
+                           and (p < stitch.SUSPECT_P
+                                or p > 1 - stitch.SUSPECT_P))
+                tests.append({"index": e.index, "name": e.name,
+                              "stat": stat, "p": p, "suspect": suspect})
+            payload["runs"][gen] = {"suspects": run.n_suspect,
+                                    "verdict": ("FAIL" if run.n_suspect
+                                                else "pass"),
+                                    "tests": tests}
+        os.makedirs(os.path.dirname(args.json_path) or ".", exist_ok=True)
+        with open(args.json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"json report -> {args.json_path}")
+
+    suspects = sum(run.n_suspect for run in runs.values())
     sys.exit(0 if suspects == 0 else 1)
 
 

@@ -17,6 +17,8 @@ import numpy as np
 
 import jax
 
+from repro.common.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -28,14 +30,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, have {len(devices)}; "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before importing jax (dry-run only)")
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_pool_mesh(n_workers: int | None = None):
     """Flat 1-D mesh for the battery pool ('workers' axis)."""
     devices = jax.devices()
     n = n_workers or len(devices)
-    return jax.make_mesh((n,), ("workers",), devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("workers",), devices=devices[:n])

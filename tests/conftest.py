@@ -1,0 +1,79 @@
+"""Shared test config + a minimal ``hypothesis`` fallback.
+
+The test image does not ship ``hypothesis`` and tier-1 must run without
+installing new packages. When the real library is importable we use it
+unchanged; otherwise we install a tiny deterministic stand-in (fixed
+per-test seed, ``max_examples`` drawn examples) into ``sys.modules``
+before the test modules import it. Only the strategy surface the suite
+actually uses is provided: ``integers``, ``sampled_from``, ``sets``.
+"""
+from __future__ import annotations
+
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real library present -> nothing to do)
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import types
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    def sets(elements, min_size=0, max_size=None):
+        def draw(r):
+            hi = min_size + 10 if max_size is None else max_size
+            size = r.randint(min_size, hi)
+            out, tries = set(), 0
+            while len(out) < size and tries < 10000:
+                out.add(elements.draw(r))
+                tries += 1
+            return out
+        return _Strategy(draw)
+
+    def settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kw):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 20))
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                    fn(*args, **kwargs, **drawn)
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategy_kw]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    _mod = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = integers
+    _st.sampled_from = sampled_from
+    _st.sets = sets
+    _mod.given = given
+    _mod.settings = settings
+    _mod.strategies = _st
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _st

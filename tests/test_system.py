@@ -1,8 +1,10 @@
-"""End-to-end behaviour tests for the paper's system (battery + pool)."""
+"""End-to-end behaviour tests for the paper's system (battery + pool),
+on the public session API (RunSpec / PoolSession / BatteryRun)."""
 import numpy as np
 import pytest
 
-from repro.core.battery import build_battery, max_words
+from repro.core.api import PoolSession, RunSpec
+from repro.core.battery import build_battery
 from repro.core.pool import make_batch_runner, run_sequential
 from repro.core.queue import run_battery
 from repro.core.scheduler import make_plan, replan
@@ -14,8 +16,8 @@ SCALE = 0.125  # CI-sized battery
 
 
 @pytest.fixture(scope="module")
-def mesh():
-    return make_pool_mesh()
+def session():
+    return PoolSession()
 
 
 @pytest.fixture(scope="module")
@@ -29,25 +31,39 @@ def test_battery_sizes():
     assert len(build_battery("bigcrush", SCALE)) == 106
 
 
-def test_good_generator_passes(mesh):
-    res = run_battery("smallcrush", "splitmix64", 7, mesh, scale=SCALE)
+def test_good_generator_passes(session):
+    res = session.submit(RunSpec("smallcrush", "splitmix64", 7,
+                                 scale=SCALE)).result()
     assert "SUSPECT" not in res.report
     assert len(res.results) == 10
 
 
-def test_randu_fails(mesh):
-    res = run_battery("smallcrush", "randu", 7, mesh, scale=SCALE)
+def test_randu_fails(session):
+    res = session.submit(RunSpec("smallcrush", "randu", 7,
+                                 scale=SCALE)).result()
     assert res.report.count("SUSPECT") >= 2          # known-bad canary
 
 
-def test_pool_matches_sequential(smallcrush, mesh):
+def test_pool_matches_sequential(smallcrush, session):
     """The paper's accuracy criterion (§11): distributed results identical
     to the single-worker run of the same individual-test semantics."""
     stats_seq, ps_seq = run_sequential(smallcrush, 3, GEN_IDS["pcg32"])
-    res = run_battery("smallcrush", "pcg32", 3, mesh, scale=SCALE)
+    res = session.submit(RunSpec("smallcrush", "pcg32", 3,
+                                 scale=SCALE)).result()
     for i in range(10):
         assert np.isclose(res.results[i][0], float(stats_seq[i]), rtol=1e-6)
         assert np.isclose(res.results[i][1], float(ps_seq[i]), rtol=1e-6)
+
+
+def test_queue_shim_matches_session(session):
+    """The classic run_battery surface is a thin driver over the session
+    API and must produce bitwise-identical results."""
+    res_old = run_battery("smallcrush", "splitmix64", 5,
+                          make_pool_mesh(), scale=SCALE)
+    res_new = session.submit(RunSpec("smallcrush", "splitmix64", 5,
+                                     scale=SCALE)).result()
+    assert res_old.results == res_new.results
+    assert res_old.report == res_new.report
 
 
 def test_results_worker_count_invariant(smallcrush):
@@ -66,15 +82,29 @@ def test_results_worker_count_invariant(smallcrush):
     assert outs[0] == outs[1]
 
 
-def test_checkpoint_restart(tmp_path, mesh):
+def test_checkpoint_restart(tmp_path, session):
     ck = str(tmp_path / "battery.ck")
-    res1 = run_battery("smallcrush", "splitmix64", 11, mesh, scale=SCALE,
-                       checkpoint_path=ck)
+    spec = RunSpec("smallcrush", "splitmix64", 11, scale=SCALE,
+                   checkpoint_path=ck)
+    res1 = session.submit(spec).result()
     # restart: everything already done -> zero rounds run
-    res2 = run_battery("smallcrush", "splitmix64", 11, mesh, scale=SCALE,
-                       checkpoint_path=ck)
+    res2 = session.submit(spec).result()
     assert res2.rounds_run == 0
     assert res1.results == res2.results
+
+
+def test_run_handle_verbs(session):
+    """submit/poll/held/release/stream — the HTCondor-shaped lifecycle."""
+    run = session.submit(RunSpec("smallcrush", "splitmix64", 2, scale=SCALE))
+    assert run.pending_rounds > 0 and not run.done
+    first = run.poll()
+    assert first["rounds_run"] == 1 and first["state"] in ("running", "done")
+    for status in run.stream():
+        pass
+    assert run.held() == []                      # deterministic kernels
+    assert run.release() == 0
+    res = run.result()
+    assert len(res.results) == 10 and run.done
 
 
 def test_hold_release_replan():
