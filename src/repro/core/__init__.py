@@ -16,3 +16,7 @@ from repro.core.policies import (  # noqa: F401
     get_policy,
     register_policy,
 )
+from repro.core.stitch import (  # noqa: F401
+    Verdict,
+    sequential_verdict,
+)

@@ -19,9 +19,20 @@ The paper's orchestration layer (`master`/`makesub`/`condor_submit`/
                    ``poll()`` advances/reports one round, ``held()``
                    lists jobs with missing/invalid results, ``release()``
                    replans them, ``result()`` drives to completion,
-                   ``stream()`` iterates per-round status. A spec with
-                   several generators fans out in ONE dispatch per round
-                   (the job is vmapped over a ``gen_ids`` axis).
+                   ``stream()`` iterates per-round status, ``verdict()``
+                   reports the sequential PASS/FAIL/UNDECIDED decision
+                   after any round, ``cancel()`` drops pending rounds
+                   (condor_rm). A spec with several generators fans out
+                   in ONE dispatch per round (the job is vmapped over a
+                   ``gen_ids`` axis).
+
+Adaptive early stopping (DESIGN.md §3-§4): ``policy="adaptive"`` orders
+rounds by discrimination/cost and ``stop_on_verdict=True`` auto-cancels
+work for a generator the moment the sequential verdict engine declares
+it definitively failed — in a multi-generator fan-out the failed
+generator drops out of the vmapped ``gen_ids`` axis on subsequent
+rounds, and once every generator is decided the remaining plan is never
+dispatched.
 
 Typical use::
 
@@ -44,7 +55,7 @@ from repro.core import stitch
 from repro.core.battery import TestEntry, build_battery
 from repro.core.policies import RetryPolicy, SchedulePolicy, get_policy
 from repro.core.pool import make_fanout_runner, make_round_runner
-from repro.core.scheduler import replan
+from repro.core.scheduler import make_plan, replan
 from repro.rng.generators import GEN_IDS
 
 # Battery presets (the folded BatteryConfig from common/config.py):
@@ -62,7 +73,12 @@ class RunSpec:
     """Declarative description of one battery run.
 
     ``generators`` may be a single name or a tuple; ``seeds`` broadcasts
-    (one seed shared by every generator) or pairs element-wise."""
+    (one seed shared by every generator) or pairs element-wise.
+
+    ``alpha`` is the family-wise error rate the sequential verdict engine
+    spends across the battery (stitch.sequential_verdict);
+    ``stop_on_verdict=True`` cancels pending work for a generator as soon
+    as its verdict is definitive."""
     battery: str
     generators: Union[str, Tuple[str, ...]] = ("splitmix64",)
     seeds: Union[int, Tuple[int, ...]] = (0,)
@@ -71,6 +87,8 @@ class RunSpec:
     retry: RetryPolicy = RetryPolicy()
     checkpoint_path: Optional[str] = None
     progress: bool = False
+    alpha: float = 0.01
+    stop_on_verdict: bool = False
 
     def __post_init__(self):
         if self.battery not in BATTERY_SIZES:
@@ -93,6 +111,8 @@ class RunSpec:
         object.__setattr__(self, "generators", gens)
         object.__setattr__(self, "seeds", seeds)
         get_policy(self.policy)                  # validate early
+        if not (0.0 < self.alpha < 1.0):
+            raise ValueError(f"alpha must be in (0, 1), got {self.alpha}")
 
     @classmethod
     def preset(cls, battery: str, **overrides) -> "RunSpec":
@@ -122,6 +142,7 @@ class RunResult:
     retries: int
     wall_s: float
     plan_rounds: int
+    verdict: Optional[stitch.Verdict] = None    # sequential decision
 
     @property
     def n_suspect(self) -> int:
@@ -140,6 +161,10 @@ class BatteryResult:
     @property
     def n_suspect(self) -> int:
         return sum(r.n_suspect for r in self.runs.values())
+
+    @property
+    def verdicts(self) -> Dict[str, stitch.Verdict]:
+        return {g: r.verdict for g, r in self.runs.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -195,11 +220,14 @@ class PoolSession:
             self._cache[key] = hit
         return hit
 
-    def _runner(self, spec: RunSpec):
-        """The jitted round program for this spec's shape (G generators)."""
+    def _runner(self, spec: RunSpec, n_gens: Optional[int] = None):
+        """The jitted round program for this spec's shape (G generators).
+        ``n_gens`` overrides the spec's width — adaptive runs shrink the
+        vmapped gen_ids axis as failed generators drop out, and each
+        surviving width is its own cached executable."""
         key = self.cache_key(spec)
         compiled = self._compiled(spec)
-        g = spec.n_generators
+        g = spec.n_generators if n_gens is None else n_gens
         runner = compiled.runners.get(g)
         if runner is None:
             def on_trace():
@@ -236,9 +264,20 @@ class BatteryRun:
         self.rounds_run = 0
         self.retries = 0
         self.plan_rounds = 0
+        self.cancelled = False
         G = spec.n_generators
         self._results: List[Dict[int, tuple]] = [dict() for _ in range(G)]
+        # sequential-verdict state: sticky per-generator decisions; a
+        # decided generator is dropped from scheduling/dispatch when the
+        # spec asks for early stopping
+        self._verdicts: List[stitch.Verdict] = [
+            stitch.sequential_verdict({}, len(self._compiled.entries),
+                                      spec.alpha) for _ in range(G)]
+        self._restored_decisions: Optional[List[int]] = None
         self._load_checkpoint()
+        self._update_verdicts()
+        if self._restored_decisions is not None:
+            self._check_restored_verdicts()
         self._queue: List[np.ndarray] = []
         todo = self._missing()
         if todo:
@@ -246,22 +285,32 @@ class BatteryRun:
 
     # -- planning ----------------------------------------------------------
 
+    def _active(self) -> List[int]:
+        """Generator positions still being driven: everyone, minus the
+        definitively-decided ones once ``stop_on_verdict`` is set."""
+        if not self.spec.stop_on_verdict:
+            return list(range(self.spec.n_generators))
+        return [g for g in range(self.spec.n_generators)
+                if not self._verdicts[g].decided]
+
     def _missing(self) -> List[int]:
-        """Job-space HELD/missing set: union across generators (deterministic
-        streams make duplicate re-execution for the others free)."""
+        """Job-space HELD/missing set: union across ACTIVE generators
+        (deterministic streams make duplicate re-execution for the others
+        free; a verdict-decided generator stops contributing demand)."""
         n = len(self._compiled.jobs)
         held = set()
-        for res in self._results:
-            held.update(stitch.missing(res, n))
+        for g in self._active():
+            held.update(stitch.missing(self._results[g], n))
         return sorted(held)
 
     def _enqueue(self, todo: List[int], initial: bool = False) -> None:
         costs = self._compiled.costs
+        jobs = self._compiled.jobs
         w = self.session.n_workers
         if initial and len(todo) == len(costs):
-            plan = get_policy(self.spec.policy).plan(costs, w)
+            plan = make_plan(costs, w, self.spec.policy, entries=jobs)
         else:
-            plan = replan(todo, costs, w, self.spec.policy)
+            plan = replan(todo, costs, w, self.spec.policy, entries=jobs)
         self.plan_rounds = self.plan_rounds or plan.rounds
         self._queue.extend(np.asarray(row, np.int32)
                            for row in plan.assignment)
@@ -277,12 +326,18 @@ class BatteryRun:
         return not self._queue and not self._missing()
 
     def poll(self) -> dict:
-        """Advance one round (one device dispatch covering every generator)
-        and report status — the paper's `master` polling `empty`."""
+        """Advance one round (one device dispatch covering every active
+        generator) and report status — the paper's `master` polling
+        `empty`. With ``stop_on_verdict`` each poll is also an interim
+        look: decided generators leave the gen_ids axis, and the queue is
+        dropped entirely once no generator remains undecided."""
+        self._auto_cancel()
         if self._queue:
             row = self._queue.pop(0)
             self._dispatch(row)
             self.rounds_run += 1
+            self._update_verdicts()
+            self._auto_cancel()
             self._save_checkpoint()
             if self.spec.progress:
                 done = self._jobs_done()
@@ -293,8 +348,76 @@ class BatteryRun:
 
     def held(self) -> List[int]:
         """Job indices with missing/invalid results once the current plan
-        is exhausted (paper: condor hold)."""
-        return [] if self._queue else self._missing()
+        is exhausted (paper: condor hold). A cancelled run holds nothing —
+        its pending work is gone, not stuck."""
+        return [] if (self._queue or self.cancelled) else self._missing()
+
+    def verdict(self) -> Union[stitch.Verdict, Dict[str, stitch.Verdict]]:
+        """The sequential verdict engine's current decision — a
+        ``stitch.Verdict`` for a single-generator spec, else one per
+        generator name. Valid after every round (Bonferroni-sequential
+        spending, DESIGN.md §4), not just at completion."""
+        self._update_verdicts()
+        if self.spec.n_generators == 1:
+            return self._verdicts[0]
+        return {gen: self._verdicts[g]
+                for g, gen in enumerate(self.spec.generators)}
+
+    def cancel(self) -> int:
+        """condor_rm: drop every pending round. Returns the number of
+        rounds cancelled. Completed results (and the verdict state built
+        from them) are kept; ``result()`` then finalizes immediately."""
+        n = len(self._queue)
+        self._queue.clear()
+        self.cancelled = True
+        self._save_checkpoint()
+        return n
+
+    def _check_restored_verdicts(self) -> None:
+        """A v2 checkpoint's saved decisions must agree with the verdicts
+        recomputed from its saved p-values — decisions are a pure function
+        of results, so disagreement means the checkpoint was edited or
+        written under a different alpha/battery."""
+        if len(self._restored_decisions) != self.spec.n_generators:
+            raise ValueError(
+                f"checkpoint {self.spec.checkpoint_path} holds verdict "
+                f"state for {len(self._restored_decisions)} generator(s), "
+                f"spec has {self.spec.n_generators}")
+        code = self._DECISION_CODE
+        for g, saved in enumerate(self._restored_decisions):
+            if saved != code[self._verdicts[g].decision]:
+                raise ValueError(
+                    f"checkpoint {self.spec.checkpoint_path}: generator "
+                    f"{self.spec.generators[g]!r} was saved as decision "
+                    f"code {saved} but its saved results recompute to "
+                    f"{self._verdicts[g].decision} under alpha="
+                    f"{self.spec.alpha} — resumed with a different spec?")
+
+    def _update_verdicts(self) -> None:
+        """Recompute interim verdicts (test-space, after sub-job combine).
+        Decisions are sticky: results never un-complete, so a decided
+        verdict is never revisited — this is what makes resume-after-FAIL
+        stable even if the checkpoint only holds the partial results."""
+        for g in range(self.spec.n_generators):
+            if self._verdicts[g].decided:
+                continue
+            combined = stitch.fold_groups(self._results[g],
+                                          self._compiled.jobs,
+                                          self._compiled.combine)
+            self._verdicts[g] = stitch.sequential_verdict(
+                combined, len(self._compiled.entries), self.spec.alpha)
+
+    def _auto_cancel(self) -> None:
+        """stop_on_verdict: once every generator is decided, pending
+        rounds are never dispatched."""
+        if (self.spec.stop_on_verdict and self._queue
+                and not self._active()):
+            dropped = len(self._queue)
+            self._queue.clear()
+            self.cancelled = True
+            if self.spec.progress:
+                print(f"  verdict decided for all generators — "
+                      f"{dropped} pending round(s) cancelled", flush=True)
 
     def release(self) -> int:
         """condor_release: replan the HELD set. Returns #jobs released."""
@@ -326,36 +449,57 @@ class BatteryRun:
 
     def status(self) -> dict:
         state = ("done" if self.done
-                 else "running" if self._queue else "held")
+                 else "running" if self._queue
+                 else "cancelled" if self.cancelled else "held")
         return {"state": state, "jobs_done": self._jobs_done(),
                 "jobs_total": len(self._compiled.jobs),
                 "pending_rounds": len(self._queue),
                 "rounds_run": self.rounds_run, "retries": self.retries,
-                "held": self.held()}
+                "held": self.held(),
+                "verdicts": {gen: self._verdicts[g].decision
+                             for g, gen in enumerate(self.spec.generators)}}
 
     # -- execution ---------------------------------------------------------
 
     def _jobs_done(self) -> int:
-        return len(self._compiled.jobs) - len(self._missing())
+        """Jobs with results for EVERY generator — reporting truth, not
+        scheduling demand (_missing spans only active generators, so a
+        cancelled generator's unexecuted jobs must not read as done)."""
+        n = len(self._compiled.jobs)
+        undone = set()
+        for res in self._results:
+            undone.update(stitch.missing(res, n))
+        return n - len(undone)
 
     def _dispatch(self, row: np.ndarray) -> None:
-        runner = self.session._runner(self.spec)
-        if self.spec.n_generators == 1:
-            stats, ps = runner(row, np.int32(self.spec.seeds[0]),
-                               np.int32(GEN_IDS[self.spec.generators[0]]))
-            per_gen = [(np.asarray(stats), np.asarray(ps))]
+        """One device dispatch covering the ACTIVE generators. When early
+        stopping has decided some of a fan-out's generators, the dispatch
+        shrinks to the survivors — the vmapped gen_ids axis narrows, the
+        failed generator's remaining tests are never executed."""
+        active = self._active()
+        if not active:
+            return
+        runner = self.session._runner(self.spec, n_gens=len(active))
+        if len(active) == 1:
+            g0 = active[0]
+            stats, ps = runner(row, np.int32(self.spec.seeds[g0]),
+                               np.int32(GEN_IDS[self.spec.generators[g0]]))
+            per_gen = [(g0, np.asarray(stats), np.asarray(ps))]
         else:
-            seeds = np.asarray(self.spec.seeds, np.int32)
-            gids = np.asarray([GEN_IDS[g] for g in self.spec.generators],
-                              np.int32)
+            seeds = np.asarray([self.spec.seeds[g] for g in active],
+                               np.int32)
+            gids = np.asarray([GEN_IDS[self.spec.generators[g]]
+                               for g in active], np.int32)
             stats, ps = runner(row, seeds, gids)
             stats, ps = np.asarray(stats), np.asarray(ps)
-            per_gen = [(stats[g], ps[g]) for g in range(len(gids))]
-        for g, (st, pv) in enumerate(per_gen):
+            per_gen = [(g, stats[a], ps[a]) for a, g in enumerate(active)]
+        for g, st, pv in per_gen:
             self._results[g] = stitch.fold(row[None, :], st[None, :],
                                            pv[None, :], self._results[g])
 
     # -- checkpointing -----------------------------------------------------
+
+    _DECISION_CODE = {stitch.UNDECIDED: 0, stitch.PASS: 1, stitch.FAIL: 2}
 
     def _save_checkpoint(self) -> None:
         path = self.spec.checkpoint_path
@@ -367,7 +511,15 @@ class BatteryRun:
                        for r in self._results], np.float64)
         pv = np.array([[r.get(int(i), (np.nan, np.nan))[1] for i in idx]
                        for r in self._results], np.float64)
-        if self.spec.n_generators == 1:     # classic single-gen flat layout
+        if self.spec.stop_on_verdict:
+            # v2 layout: verdict state rides along, so a resumed run knows
+            # which generators were already decided (and how many rounds
+            # the original run spent getting there) without re-executing
+            decisions = np.array([self._DECISION_CODE[v.decision]
+                                  for v in self._verdicts], np.int8)
+            ckpt_io.save(path, [idx, st, pv, decisions,
+                                np.int64(self.rounds_run)])
+        elif self.spec.n_generators == 1:   # classic single-gen flat layout
             ckpt_io.save(path, [idx, st[0], pv[0]])
         else:
             ckpt_io.save(path, [idx, st, pv])
@@ -376,7 +528,18 @@ class BatteryRun:
         path = self.spec.checkpoint_path
         if not (path and ckpt_io.exists(path)):
             return
-        idx, st, pv = ckpt_io.load_flat(path)
+        leaves = ckpt_io.load_flat(path)
+        if len(leaves) == 5:                # v2: verdict state present
+            idx, st, pv, decisions, rounds = leaves
+            self._restored_decisions = [int(d) for d in np.atleast_1d(decisions)]
+            self.rounds_run = int(rounds)
+        elif len(leaves) == 3:              # classic results-only layout
+            idx, st, pv = leaves
+            self._restored_decisions = None
+        else:
+            raise ValueError(
+                f"checkpoint {path} has {len(leaves)} leaves; expected 3 "
+                "(classic) or 5 (verdict-state v2)")
         st = np.atleast_2d(st)
         pv = np.atleast_2d(pv)
         if st.shape[0] != self.spec.n_generators:
@@ -397,6 +560,7 @@ class BatteryRun:
 
     def _finalize(self) -> Union[RunResult, BatteryResult]:
         wall = time.time() - self._t0
+        self._update_verdicts()
         runs: Dict[str, RunResult] = {}
         for g, gen in enumerate(self.spec.generators):
             combined = stitch.fold_groups(self._results[g],
@@ -405,7 +569,8 @@ class BatteryRun:
             rep = stitch.report(self._compiled.entries, combined, gen,
                                 self.spec.seeds[g])
             runs[gen] = RunResult(combined, rep, self.rounds_run,
-                                  self.retries, wall, self.plan_rounds)
+                                  self.retries, wall, self.plan_rounds,
+                                  verdict=self._verdicts[g])
         if self.spec.n_generators == 1:
             return runs[self.spec.generators[0]]
         return BatteryResult(self.spec, runs, self.rounds_run, self.retries,

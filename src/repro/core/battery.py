@@ -21,6 +21,27 @@ KERNEL_WEIGHT = {
     "hamcorr": 0.6, "serial2d": 0.8,
 }
 
+# Historical discriminating power per kernel, seeded from the known-bad
+# generators (rng/generators.py: RANDU and MINSTD shift their 31-bit state
+# left, so bit 0 is constant — the bit-level kernels annihilate them:
+# weight/rank give p = 0, hamcorr p ~ 1e-27, while the distributional
+# kernels barely notice at CI scales). The adaptive schedule policy ranks
+# jobs by DISCRIMINATION/cost, so a cheap killer like `weight` lands in
+# round one and a bad generator is failed long before `coupon` or `rank`
+# would have been dispatched. Static by design — the table is part of the
+# battery definition, not of any one run's history (DESIGN.md §3).
+DISCRIMINATION = {
+    "weight": 1.0, "rank": 1.0, "hamcorr": 0.8,
+    "birthday": 0.3, "serial2d": 0.3, "collision": 0.2,
+    "gap": 0.15, "maxoft": 0.15, "poker": 0.1, "coupon": 0.05,
+}
+
+
+def discrimination(entry: "TestEntry") -> float:
+    """Discriminating power of a battery entry (0 when kname is unknown —
+    synthetic/test entries schedule by cost alone)."""
+    return DISCRIMINATION.get(entry.kname, 0.0)
+
 
 @dataclasses.dataclass(frozen=True)
 class TestEntry:
@@ -111,8 +132,13 @@ def _scaled(kw, kname, scale):
         lam0 = orig_n ** 3 / (4.0 * (1 << kw.get("tbits", 30)))
         tb = kw.get("tbits", 30) + round(3 * math.log2(max(scale, 1e-9)))
         kw["tbits"] = min(max(tb, 16), 30)
-        kw["n"] = max(int(round((lam0 * 4 * (1 << kw["tbits"])) ** (1 / 3))),
-                      128)
+        n = int(round((lam0 * 4 * (1 << kw["tbits"])) ** (1 / 3)))
+        # Poisson validity needs lambda << n; when tbits clamps hard the
+        # re-solved n can leave lambda ~ n (the duplicate-spacing count
+        # stops being Poisson and every generator skews p -> 1). Cap n at
+        # sqrt(k)/2 so lambda = n^3/4k <= n/16 always holds.
+        n = min(n, int(math.sqrt(1 << kw["tbits"]) / 2))
+        kw["n"] = max(n, 128)
     if kname == "collision" and "n" in kw:
         # keep lambda = n^2/2k invariant (collision count regime)
         kb = kw.get("kbits", 26) + round(2 * math.log2(max(scale, 1e-9)))

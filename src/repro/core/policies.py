@@ -11,12 +11,20 @@ condor slot list). Here placement is a registered ``SchedulePolicy``:
                   lambda-invariant re-parameterization), scheduled with LPT,
                   and the stitcher folds each group's sub-results back into
                   one verdict via a Stouffer/Fisher p-value combine.
+  adaptive        early-stopping order (Ryabko-style, DESIGN.md §3): rounds
+                  are filled in descending discrimination/cost priority, so
+                  the cheap tests that historically kill bad generators run
+                  first and the sequential verdict engine (stitch) can
+                  cancel a failed generator after round one instead of
+                  after the whole battery.
 
 Policies are host-side and pure: ``plan`` maps (costs, workers) to a
 ``Plan``; ``decompose`` (optional) maps the battery's job table to an
-expanded one. Only decomposition changes the compiled pool program, so
-``PoolSession`` keys its compile cache on the decomposition signature,
-not the plan mode.
+expanded one; ``plan_entries`` (optional, adaptive only) is preferred by
+the driver when the policy needs more than costs — the battery entries
+carry the kernel family the discrimination table is keyed on. Only
+decomposition changes the compiled pool program, so ``PoolSession`` keys
+its compile cache on the decomposition signature, not the plan mode.
 """
 from __future__ import annotations
 
@@ -42,13 +50,19 @@ class Plan:
         return self.assignment.shape[0]
 
 
-def _roundrobin_plan(costs: np.ndarray, n_workers: int) -> np.ndarray:
-    k = len(costs)
-    rounds = -(-k // n_workers)
+def _ordered_assignment(order, n_workers: int) -> np.ndarray:
+    """Fill rounds of W slots in the given job order (round-robin is the
+    identity order)."""
+    order = list(order)
+    rounds = -(-len(order) // n_workers)
     a = np.full((rounds, n_workers), -1, np.int32)
-    for i in range(k):
-        a[i // n_workers, i % n_workers] = i
+    for pos, i in enumerate(order):
+        a[pos // n_workers, pos % n_workers] = i
     return a
+
+
+def _roundrobin_plan(costs: np.ndarray, n_workers: int) -> np.ndarray:
+    return _ordered_assignment(range(len(costs)), n_workers)
 
 
 def _lpt_plan(costs: np.ndarray, n_workers: int) -> np.ndarray:
@@ -170,6 +184,54 @@ class OverDecomposePolicy:
         return (self.name, self.max_parts, self.threshold)
 
 
+def _ordered_plan(order: Sequence[int], costs: np.ndarray,
+                  n_workers: int, mode: str) -> Plan:
+    """Priority-ordered plan. Round r IS the r-th interim look of the
+    sequential verdict engine, so order here is execution order, not
+    just placement."""
+    return _finish_plan(_ordered_assignment(order, n_workers), costs,
+                        n_workers, mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptivePolicy:
+    """Early-stopping schedule order: jobs are ranked by
+    ``discrimination / cost`` (battery.DISCRIMINATION — the static table
+    seeded from the known-bad generators) and rounds are filled in that
+    order, so the cheapest historically-discriminating tests execute in
+    the earliest rounds. Ties and unknown kernels fall back to
+    cheapest-first, which still front-loads verdict information: an
+    interim look after round r has seen the most tests per unit of wall
+    clock. Placement is deliberately NOT makespan-optimal — the point is
+    to minimise expected rounds-to-verdict for a bad generator, and the
+    driver cancels the tail of the plan once the verdict lands."""
+    name: str = "adaptive"
+
+    def plan(self, costs, n_workers):
+        costs = np.asarray(costs, np.float64)
+        order = np.argsort(costs, kind="stable")        # cheap first
+        return _ordered_plan([int(i) for i in order], costs, n_workers,
+                             self.name)
+
+    def plan_entries(self, entries, n_workers):
+        """Priority plan over real battery entries (discrimination/cost)."""
+        from repro.core.battery import discrimination
+        costs = np.asarray([e.cost for e in entries], np.float64)
+        score = np.asarray([discrimination(e) for e in entries], np.float64)
+        # primary: discrimination per unit cost, descending; tie-break on
+        # cheapness so zero-discrimination tails still run cheap-first
+        priority = score / np.maximum(costs, 1e-12)
+        order = sorted(range(len(entries)),
+                       key=lambda i: (-priority[i], costs[i], i))
+        return _ordered_plan(order, costs, n_workers, self.name)
+
+    def decompose(self, entries, n_workers):
+        return None
+
+    def signature(self):
+        return None
+
+
 POLICIES: Dict[str, SchedulePolicy] = {}
 
 
@@ -181,6 +243,7 @@ def register_policy(policy: SchedulePolicy) -> SchedulePolicy:
 register_policy(RoundRobinPolicy())
 register_policy(LPTPolicy())
 register_policy(OverDecomposePolicy())
+register_policy(AdaptivePolicy())
 
 
 def get_policy(policy: Union[str, SchedulePolicy]) -> SchedulePolicy:

@@ -23,15 +23,29 @@ from repro.core.policies import (  # noqa: F401  (re-exported for compat)
 
 
 def make_plan(costs: Sequence[float], n_workers: int,
-              mode: Union[str, SchedulePolicy] = "roundrobin") -> Plan:
-    return get_policy(mode).plan(costs, n_workers)
+              mode: Union[str, SchedulePolicy] = "roundrobin",
+              entries: Sequence = None) -> Plan:
+    """Plan via the registered policy. When ``entries`` (the battery job
+    table) is given and the policy defines ``plan_entries`` — the adaptive
+    policy ranks by the entries' kernel discrimination, not just cost —
+    the richer form is preferred; every other policy sees only costs."""
+    policy = get_policy(mode)
+    plan_entries = getattr(policy, "plan_entries", None)
+    if entries is not None and plan_entries is not None:
+        return plan_entries(entries, n_workers)
+    return policy.plan(costs, n_workers)
 
 
 def replan(missing: Sequence[int], costs: Sequence[float],
-           n_workers: int, mode: Union[str, SchedulePolicy] = "lpt") -> Plan:
+           n_workers: int, mode: Union[str, SchedulePolicy] = "lpt",
+           entries: Sequence = None) -> Plan:
     """Plan covering only `missing` job indices (hold/release retry rounds,
-    and elastic re-meshing after worker loss: same call, smaller W)."""
-    sub = make_plan([costs[i] for i in missing], n_workers, mode)
+    elastic re-meshing after worker loss, and adaptive resumes — the
+    priority order is recomputed over just the still-missing entries)."""
+    sub_entries = ([entries[i] for i in missing]
+                   if entries is not None else None)
+    sub = make_plan([costs[i] for i in missing], n_workers, mode,
+                    entries=sub_entries)
     remap = np.asarray(list(missing) + [-1], np.int32)
     a = remap[np.where(sub.assignment >= 0, sub.assignment, len(missing))]
     return Plan(a.astype(np.int32), sub.mode, sub.est_makespan,

@@ -7,10 +7,17 @@ slots back to job indices. When the schedule policy over-decomposed a
 test into sub-jobs, ``fold_groups`` combines each group's sub-p-values
 back into one per-test verdict (Stouffer by default — keeps both tails —
 or Fisher). Suspicious p-values are flagged with TestU01's convention
-(outside [eps, 1-eps])."""
+(outside [eps, 1-eps]).
+
+``sequential_verdict`` is the early-stopping decision engine (DESIGN.md
+§4): a Bonferroni-sequential combination over however many tests have
+completed so far, valid at every interim look — which is what lets the
+adaptive schedule policy cancel a definitively-failed generator after
+any round without inflating the family-wise error rate."""
 from __future__ import annotations
 
-from typing import Dict, List
+import dataclasses
+from typing import Dict, List, Tuple
 
 import numpy as np
 from scipy import special as sps
@@ -91,6 +98,73 @@ def fold_groups(job_results: Dict[int, tuple], jobs,
         if ok:
             out[g] = fold_fn(ps)
     return out
+
+
+# ---------------------------------------------------------------------------
+# sequential verdict engine (adaptive early stopping, DESIGN.md §4)
+
+PASS, FAIL, UNDECIDED = "PASS", "FAIL", "UNDECIDED"
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """Outcome of one interim (or final) look at a generator's results.
+
+    ``decision`` is FAIL the moment any completed test crosses the
+    Bonferroni boundary, PASS only once every test has completed without
+    a crossing, UNDECIDED otherwise. ``threshold`` is the per-test,
+    per-tail rejection boundary actually applied."""
+    decision: str                   # PASS | FAIL | UNDECIDED
+    alpha: float                    # configured family-wise error rate
+    threshold: float                # per-test per-tail boundary
+    n_checked: int                  # tests with a valid result so far
+    n_total: int                    # battery size (test space)
+    failed_tests: Tuple[int, ...]   # test indices past the boundary
+
+    @property
+    def decided(self) -> bool:
+        return self.decision != UNDECIDED
+
+    def __str__(self):
+        return (f"{self.decision} (alpha={self.alpha:g}, "
+                f"{self.n_checked}/{self.n_total} tests checked, "
+                f"{len(self.failed_tests)} past boundary)")
+
+
+def sequential_verdict(results: Dict[int, tuple], n_total: int,
+                       alpha: float = 0.01) -> Verdict:
+    """Interim verdict over the completed subset of an ``n_total``-test
+    battery, valid after every round.
+
+    The spending rule is Bonferroni-sequential: each of the ``n_total``
+    tests is granted ``alpha / n_total`` of the family-wise budget
+    (``alpha / 2n`` per tail — TestU01's suspect rule is two-sided), and
+    a test's share is spent when its result lands, in whatever order the
+    schedule delivers it. Because every test's boundary is fixed up
+    front, the rejection decision is invariant to execution order and to
+    WHEN you look — stopping at the first crossing spends exactly the
+    budget of the tests examined so far, so the false-FAIL rate of the
+    stopped battery is bounded by ``alpha`` regardless of how the
+    adaptive policy reorders or truncates the schedule."""
+    if n_total <= 0:
+        raise ValueError("n_total must be positive")
+    thr = alpha / (2.0 * n_total)
+    failed = []
+    n_checked = 0
+    for i, (stat, p) in results.items():
+        if not (np.isfinite(p) and 0.0 <= p <= 1.0):
+            continue
+        n_checked += 1
+        if p < thr or p > 1.0 - thr:
+            failed.append(int(i))
+    if failed:
+        decision = FAIL
+    elif n_checked >= n_total:
+        decision = PASS
+    else:
+        decision = UNDECIDED
+    return Verdict(decision, float(alpha), float(thr), n_checked,
+                   int(n_total), tuple(sorted(failed)))
 
 
 def report(entries, results: Dict[int, tuple], gen_name: str,

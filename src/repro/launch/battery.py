@@ -10,6 +10,12 @@ dry-run trick, battery-sized); on a real TPU pod the same code runs on the
 flattened device mesh. Checkpoints progress per round; re-running the same
 command resumes (only missing tests execute). ``--json PATH`` writes a
 machine-readable report next to the text one.
+
+``--adaptive`` switches to the early-stopping execution mode: the
+adaptive schedule policy front-loads cheap discriminating tests, the
+sequential verdict engine (alpha from ``--alpha``) decides
+PASS/FAIL/UNDECIDED after every round, and pending rounds for a
+definitively-failed generator are cancelled instead of dispatched.
 """
 import argparse
 import json
@@ -29,12 +35,25 @@ def main():
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--policy", "--mode", dest="policy", default="lpt",
-                    choices=["lpt", "roundrobin", "over_decompose"])
+                    choices=["lpt", "roundrobin", "over_decompose",
+                             "adaptive"])
+    ap.add_argument("--adaptive", action="store_true",
+                    help="early-stopping mode: adaptive schedule order + "
+                         "stop_on_verdict (cancel a generator's pending "
+                         "rounds once its verdict is definitive)")
+    ap.add_argument("--alpha", type=float, default=0.01,
+                    help="family-wise error rate the sequential verdict "
+                         "engine spends across the battery")
     ap.add_argument("--retries", type=int, default=2)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write a machine-readable report to this path")
     args = ap.parse_args()
+    if args.adaptive:
+        if args.policy not in ("lpt", "adaptive"):
+            ap.error(f"--adaptive selects the adaptive schedule policy; "
+                     f"it cannot be combined with --policy {args.policy}")
+        args.policy = "adaptive"
 
     if args.workers > 1 and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = \
@@ -51,25 +70,33 @@ def main():
     spec = RunSpec(args.battery, generators=gens, seeds=(args.seed,),
                    scale=args.scale, policy=args.policy,
                    retry=RetryPolicy(max_retries=args.retries),
-                   checkpoint_path=args.ckpt, progress=True)
+                   checkpoint_path=args.ckpt, progress=True,
+                   alpha=args.alpha, stop_on_verdict=args.adaptive)
     print(f"pool: {session.n_workers} workers | battery={args.battery} "
-          f"gen={','.join(gens)} scale={args.scale} policy={args.policy}")
+          f"gen={','.join(gens)} scale={args.scale} policy={args.policy}"
+          + (f" adaptive(alpha={args.alpha})" if args.adaptive else ""))
 
-    res = session.submit(spec).result()
+    handle = session.submit(spec)
+    res = handle.result()
     multi = isinstance(res, BatteryResult)
     runs = res.runs if multi else {gens[0]: res}
     for run in runs.values():
         print(run.report)
-    print(f"\nwall={res.wall_s:.1f}s rounds={res.rounds_run} "
-          f"retries={res.retries}")
+    for gen, run in runs.items():
+        print(f"verdict[{gen}]: {run.verdict}")
+    print(f"\nwall={res.wall_s:.1f}s rounds={res.rounds_run}"
+          f"/{res.runs[gens[0]].plan_rounds if multi else res.plan_rounds}"
+          f" retries={res.retries}")
 
     if args.json_path:
         entries = session.entries(spec)
         payload = {
             "battery": args.battery, "scale": args.scale,
             "workers": session.n_workers, "policy": args.policy,
+            "adaptive": args.adaptive, "alpha": args.alpha,
             "seed": args.seed, "wall_s": round(res.wall_s, 3),
             "rounds_run": res.rounds_run, "retries": res.retries,
+            "plan_rounds": next(iter(runs.values())).plan_rounds,
             "runs": {},
         }
         for gen, run in runs.items():
@@ -81,17 +108,28 @@ def main():
                                 or p > 1 - stitch.SUSPECT_P))
                 tests.append({"index": e.index, "name": e.name,
                               "stat": stat, "p": p, "suspect": suspect})
-            payload["runs"][gen] = {"suspects": run.n_suspect,
-                                    "verdict": ("FAIL" if run.n_suspect
-                                                else "pass"),
-                                    "tests": tests}
+            v = run.verdict
+            payload["runs"][gen] = {
+                "suspects": run.n_suspect,
+                "verdict": v.decision,
+                "tests_checked": v.n_checked,
+                "failed_tests": list(v.failed_tests),
+                "rounds_run": run.rounds_run,
+                "tests": tests}
         os.makedirs(os.path.dirname(args.json_path) or ".", exist_ok=True)
         with open(args.json_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"json report -> {args.json_path}")
 
+    # classic contract: exit 1 iff any suspect p-value. An adaptive run may
+    # have cancelled before producing suspects-in-report for every failed
+    # generator, so there the sequential verdict also gates the exit code
+    # (its alpha/2n boundary is looser than SUSPECT_P — applying it to
+    # non-adaptive runs would contradict the printed report).
     suspects = sum(run.n_suspect for run in runs.values())
-    sys.exit(0 if suspects == 0 else 1)
+    failed = args.adaptive and any(run.verdict.decision == "FAIL"
+                                   for run in runs.values())
+    sys.exit(0 if suspects == 0 and not failed else 1)
 
 
 if __name__ == "__main__":

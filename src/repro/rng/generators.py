@@ -64,10 +64,10 @@ def splitmix64_block(seed, stream, n, offset=0):
     return _hi32(_splitmix_hash(ctr))
 
 
-def msweyl_block(seed, stream, n):
+def msweyl_block(seed, stream, n, offset=0):
     """Middle-Square Weyl sequence (Widynski) — counter form."""
     s = _mix_seed(seed, stream) | _u64(1)
-    w = jnp.arange(1, n + 1, dtype=jnp.uint64) * s
+    w = (jnp.arange(1, n + 1, dtype=jnp.uint64) + _u64(offset)) * s
     x = w
     for _ in range(3):
         x = x * x + w
@@ -75,9 +75,17 @@ def msweyl_block(seed, stream, n):
     return _hi32(x)
 
 
-def threefry_block(seed, stream, n):
+def threefry_block(seed, stream, n, offset=0):
+    """Threefry in explicit counter mode: word i is
+    ``bits(fold_in(key, offset + i))``, one key-hash per element, vmapped.
+    jax.random.bits over a whole shape is NOT continuation-stable (its
+    threefry2x32 pairs the iota's halves, so the pairing depends on the
+    block length) — hashing each counter independently is, at ~2x the
+    hashing cost."""
     key = jax.random.fold_in(jax.random.PRNGKey(seed), stream)
-    return jax.random.bits(key, (n,), jnp.uint32)
+    ctr = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(offset)
+    return jax.vmap(lambda i: jax.random.bits(
+        jax.random.fold_in(key, i), (), jnp.uint32))(ctr)
 
 
 LCG_A = 6364136223846793005
@@ -108,8 +116,9 @@ def pcg32_block(seed, stream, n, offset=0):
     return (xorshifted >> rot) | (xorshifted << ((-rot) & jnp.uint32(31)))
 
 
-def lcg64_block(seed, stream, n):
-    st = _lcg_jump(_mix_seed(seed, stream), jnp.arange(n, dtype=jnp.uint64))
+def lcg64_block(seed, stream, n, offset=0):
+    st = _lcg_jump(_mix_seed(seed, stream),
+                   jnp.arange(n, dtype=jnp.uint64) + _u64(offset))
     return _hi32(st)
 
 
@@ -177,6 +186,13 @@ GENERATORS: Dict[str, Callable] = {
     "minstd": minstd_block,
 }
 GEN_IDS = {name: i for i, name in enumerate(GENERATORS)}
+
+# Counter-based generators: block(seed, stream, n, offset) supports exact
+# continuation — block(n=2k) == block(n=k) ++ block(n=k, offset=k) — the
+# property that makes sequential-reuse mode and over-decomposition exact.
+# The scan-based recurrences (xorshift64s, mwc, randu, minstd) are absent
+# by construction: they have no O(1) jump-ahead.
+COUNTER_BASED = ("splitmix64", "msweyl", "threefry", "pcg32", "lcg64")
 
 
 def gen_block_by_id(gen_id, seed, stream, n):

@@ -1,0 +1,296 @@
+"""Adaptive early stopping: statistical calibration of the sequential
+verdict engine, equivalence of early-stopped and full-battery verdicts,
+cancellation, and verdict-state checkpoint resume.
+
+The calibration tests are the point of this file (Wartel & Hill: a
+parallel test rig's verdicts are only trustworthy if the rig itself is
+calibrated): under the null the adaptive verdict's false-FAIL rate must
+stay within the binomial CI of the configured alpha, and the round-level
+p-values must stay uniform when the adaptive policy reorders execution.
+"""
+import numpy as np
+import pytest
+
+from repro.core import stitch
+from repro.core.api import PoolSession, RunSpec
+from repro.core.battery import DISCRIMINATION, build_battery, discrimination
+from repro.core.policies import get_policy
+from repro.core.stitch import FAIL, PASS, UNDECIDED, sequential_verdict
+
+SCALE = 0.125
+GOOD = ("splitmix64", "threefry", "pcg32", "xorshift64s", "mwc", "msweyl",
+        "lcg64")
+
+
+@pytest.fixture(scope="module")
+def session():
+    return PoolSession()
+
+
+def wilson_ci(k: int, n: int, z: float = 2.576):
+    """99% Wilson score interval for a binomial proportion."""
+    p = k / n
+    denom = 1 + z ** 2 / n
+    center = (p + z ** 2 / (2 * n)) / denom
+    half = z * np.sqrt(p * (1 - p) / n + z ** 2 / (4 * n ** 2)) / denom
+    return center - half, center + half
+
+
+# ------------------------------------------------------- verdict engine
+
+def test_sequential_verdict_basic():
+    n = 10
+    v = sequential_verdict({}, n, alpha=0.01)
+    assert v.decision == UNDECIDED and not v.decided
+    full_null = {i: (0.0, 0.5) for i in range(n)}
+    assert sequential_verdict(full_null, n, 0.01).decision == PASS
+    bad = dict(full_null)
+    bad[3] = (9.0, 1e-12)
+    v = sequential_verdict(bad, n, 0.01)
+    assert v.decision == FAIL and v.failed_tests == (3,)
+    # high tail is rejected too (TestU01's two-sided suspect convention)
+    hi = dict(full_null)
+    hi[7] = (9.0, 1.0 - 1e-12)
+    assert sequential_verdict(hi, n, 0.01).decision == FAIL
+    # invalid/missing results don't count as checked
+    part = {0: (0.0, 0.5), 1: (float("nan"), float("nan"))}
+    v = sequential_verdict(part, n, 0.01)
+    assert v.n_checked == 1 and v.decision == UNDECIDED
+    with pytest.raises(ValueError):
+        sequential_verdict({}, 0, 0.01)
+
+
+def test_verdict_order_invariant():
+    """Stopping at ANY interim look never contradicts the full-battery
+    decision — the Bonferroni boundary is fixed per test up front."""
+    rng = np.random.default_rng(0)
+    n, alpha = 10, 0.05
+    for trial in range(200):
+        ps = rng.uniform(size=n)
+        if trial % 3 == 0:
+            ps[rng.integers(n)] = 10.0 ** -rng.uniform(4, 12)
+        full = sequential_verdict(
+            {i: (0.0, p) for i, p in enumerate(ps)}, n, alpha)
+        order = rng.permutation(n)
+        interim = {}
+        for i in order:
+            interim[int(i)] = (0.0, float(ps[i]))
+            v = sequential_verdict(interim, n, alpha)
+            if v.decision == FAIL:
+                break
+        assert v.decision == full.decision
+
+
+def test_engine_false_fail_rate_within_binomial_ci_of_alpha():
+    """Calibration headline, engine level: feed the sequential verdict
+    engine many synthetic null batteries (uniform p-values) and check the
+    false-FAIL rate sits inside the binomial CI around alpha (it is
+    guaranteed <= alpha; it must also not collapse to ~0, i.e. the engine
+    actually spends its budget)."""
+    rng = np.random.default_rng(42)
+    n, alpha, m = 10, 0.05, 4000
+    fails = 0
+    for _ in range(m):
+        ps = rng.uniform(size=n)
+        v = sequential_verdict({i: (0.0, p) for i, p in enumerate(ps)},
+                               n, alpha)
+        assert v.decision in (PASS, FAIL)
+        fails += v.decision == FAIL
+    lo, hi = wilson_ci(fails, m)
+    # exact null crossing prob: 1 - (1 - alpha/n)^n, slightly below alpha
+    expect = 1.0 - (1.0 - alpha / n) ** n
+    assert lo <= alpha, (fails, m, lo, hi)         # not anti-conservative
+    assert lo <= expect <= hi, (fails, m, lo, hi)  # and spends the budget
+
+
+@pytest.mark.slow
+def test_null_false_fail_rate_end_to_end(session):
+    """Calibration headline, end to end: real batteries on the good
+    generators over many seeds/streams. The adaptive verdict's false-FAIL
+    rate must stay within the (99%) binomial CI of the configured alpha."""
+    alpha, verdicts = 0.05, []
+    for seed in range(10):
+        spec = RunSpec("smallcrush", GOOD, seed, scale=SCALE,
+                       policy="adaptive", alpha=alpha, stop_on_verdict=True)
+        res = session.submit(spec).result()
+        for g in GOOD:
+            v = res.runs[g].verdict
+            assert v.decided, (g, seed)
+            verdicts.append(v.decision)
+    m = len(verdicts)
+    fails = verdicts.count(FAIL)
+    lo, hi = wilson_ci(fails, m)
+    assert lo <= alpha <= max(hi, alpha), (fails, m, lo, hi)
+    # the engine must not be wildly anti-conservative on real batteries
+    assert fails / m <= alpha + 3 * np.sqrt(alpha * (1 - alpha) / m)
+
+
+@pytest.mark.slow
+def test_round_level_pvalues_uniform_under_adaptive_order(session):
+    """Reordering rounds by the adaptive policy must not bias p-values:
+    results are bitwise those of any other schedule (deterministic
+    streams), and the p-values seen in the EARLY rounds — the ones an
+    early-stopped run acts on — look uniform, not tail-inflated."""
+    lpt = session.submit(RunSpec("smallcrush", "splitmix64", 3,
+                                 scale=SCALE, policy="lpt")).result()
+    ada = session.submit(RunSpec("smallcrush", "splitmix64", 3,
+                                 scale=SCALE, policy="adaptive")).result()
+    assert ada.results == lpt.results            # bitwise order-invariance
+    # pool early-round p-values across seeds: first half of the adaptive
+    # execution order, which front-loads the discriminating kernels
+    entries = build_battery("smallcrush", SCALE)
+    plan = get_policy("adaptive").plan_entries(entries, 1)
+    early_jobs = [int(j) for j in plan.assignment[:5].ravel() if j >= 0]
+    early_p = []
+    for seed in range(6):
+        res = session.submit(RunSpec("smallcrush", "splitmix64", seed,
+                                     scale=SCALE,
+                                     policy="adaptive")).result()
+        early_p.extend(res.results[j][1] for j in early_jobs)
+    early_p = np.asarray(early_p)
+    assert 0.25 < early_p.mean() < 0.75
+    assert (early_p < 0.5).sum() > len(early_p) * 0.2
+    assert ((early_p < 1e-4) | (early_p > 1 - 1e-4)).sum() == 0
+
+
+# ------------------------------------------------- adaptive plan order
+
+def test_adaptive_plan_front_loads_discriminating_tests():
+    entries = build_battery("smallcrush", 1.0)
+    plan = get_policy("adaptive").plan_entries(entries, 2)
+    order = [int(j) for j in plan.assignment.ravel() if j >= 0]
+    assert sorted(order) == list(range(len(entries)))   # complete coverage
+    names = [entries[j].kname for j in order]
+    # the cheap killer (weight, discrimination 1.0, lowest cost-per-power)
+    # must beat every zero/low-power heavyweight to the front
+    assert names.index("weight") < names.index("coupon")
+    assert names.index("weight") < names.index("poker")
+    assert names.index("hamcorr") < names.index("coupon")
+    # priority actually is discrimination/cost, descending
+    prio = [discrimination(entries[j]) / entries[j].cost for j in order]
+    assert all(a >= b - 1e-12 for a, b in zip(prio, prio[1:]))
+
+
+def test_discrimination_table_covers_all_kernels():
+    entries = build_battery("bigcrush", 1.0)
+    assert {e.kname for e in entries} <= set(DISCRIMINATION)
+
+
+# ------------------------------------- equivalence + early-stop savings
+
+@pytest.mark.parametrize("gen", ["randu", "minstd"])
+def test_early_stop_matches_full_battery_fewer_rounds(session, gen):
+    full = session.submit(RunSpec("smallcrush", gen, 9, scale=SCALE,
+                                  policy="adaptive")).result()
+    earl = session.submit(RunSpec("smallcrush", gen, 9, scale=SCALE,
+                                  policy="adaptive",
+                                  stop_on_verdict=True)).result()
+    assert full.verdict.decision == FAIL
+    assert earl.verdict.decision == FAIL
+    assert earl.verdict.failed_tests == full.verdict.failed_tests
+    assert earl.rounds_run < full.rounds_run      # strictly fewer
+    # the results it did compute are bitwise the full battery's
+    for i, sp in earl.results.items():
+        assert sp == full.results[i]
+
+
+def test_multi_gen_failed_generator_drops_out(session):
+    spec = RunSpec("smallcrush", ("splitmix64", "randu"), 9, scale=SCALE,
+                   policy="adaptive", stop_on_verdict=True)
+    run = session.submit(spec)
+    for status in run.stream():
+        pass
+    res = run.result()
+    assert res.verdicts["randu"].decision == FAIL
+    assert res.verdicts["splitmix64"].decision == PASS
+    # randu dropped out mid-run: strictly fewer of its tests executed
+    n_randu = sum(np.isfinite(p) for _, p in res.runs["randu"].results.values())
+    n_good = sum(np.isfinite(p)
+                 for _, p in res.runs["splitmix64"].results.values())
+    assert n_randu < n_good == 10
+
+
+# ------------------------------------------------ cancel + checkpointing
+
+def test_cancel_drops_pending_rounds(session):
+    run = session.submit(RunSpec("smallcrush", "splitmix64", 2, scale=SCALE,
+                                 policy="adaptive"))
+    run.poll()
+    pending = run.pending_rounds
+    assert pending > 0
+    assert run.cancel() == pending
+    assert run.pending_rounds == 0 and run.held() == []
+    assert run.status()["state"] == "cancelled"
+    res = run.result()
+    assert res.rounds_run == 1
+    assert res.verdict.decision == UNDECIDED     # not enough evidence
+
+
+def test_checkpoint_resume_mid_verdict_undecided(tmp_path, session):
+    """Resume BEFORE the verdict lands: the resumed run continues to the
+    same early-stopped FAIL, re-executing nothing it already has."""
+    ck = str(tmp_path / "mid.ck")
+    spec = RunSpec("smallcrush", "randu", 9, scale=SCALE, policy="adaptive",
+                   stop_on_verdict=True, checkpoint_path=ck)
+    run1 = session.submit(spec)
+    run1.poll()                                   # one round, no verdict yet
+    assert run1.verdict().decision == UNDECIDED
+    run2 = session.submit(spec)                   # fresh handle, same ckpt
+    assert run2.rounds_run == 1                   # verdict state survived
+    res = run2.result()
+    assert res.verdict.decision == FAIL
+    assert res.rounds_run < res.plan_rounds + 1
+
+
+def test_checkpoint_resume_after_verdict_runs_nothing(tmp_path, session):
+    ck = str(tmp_path / "decided.ck")
+    spec = RunSpec("smallcrush", "randu", 9, scale=SCALE, policy="adaptive",
+                   stop_on_verdict=True, checkpoint_path=ck)
+    res1 = session.submit(spec).result()
+    assert res1.verdict.decision == FAIL
+    run2 = session.submit(spec)
+    assert run2.pending_rounds == 0               # nothing re-enqueued
+    assert run2.verdict().decision == FAIL
+    res2 = run2.result()
+    assert res2.rounds_run == res1.rounds_run     # no extra work
+    assert res2.results == res1.results
+
+
+def test_checkpoint_v2_rejects_wrong_generator_count(tmp_path, session):
+    ck = str(tmp_path / "v2.ck")
+    spec = RunSpec("smallcrush", ("splitmix64", "randu"), 9, scale=SCALE,
+                   policy="adaptive", stop_on_verdict=True,
+                   checkpoint_path=ck)
+    session.submit(spec).poll()
+    bad = RunSpec("smallcrush", "splitmix64", 9, scale=SCALE,
+                  policy="adaptive", stop_on_verdict=True,
+                  checkpoint_path=ck)
+    with pytest.raises(ValueError):
+        session.submit(bad)
+
+
+def test_classic_checkpoint_format_untouched(tmp_path, session):
+    """Without stop_on_verdict the checkpoint stays in the classic 3-leaf
+    layout old tooling reads."""
+    from repro.ckpt import io as ckpt_io
+    ck = str(tmp_path / "classic.ck")
+    spec = RunSpec("smallcrush", "splitmix64", 11, scale=SCALE,
+                   policy="adaptive", checkpoint_path=ck)
+    session.submit(spec).result()
+    assert len(ckpt_io.load_flat(ck)) == 3
+
+
+# ------------------------------------------------------------- alpha knob
+
+def test_runspec_validates_alpha():
+    with pytest.raises(ValueError):
+        RunSpec("smallcrush", "splitmix64", 1, alpha=0.0)
+    with pytest.raises(ValueError):
+        RunSpec("smallcrush", "splitmix64", 1, alpha=1.5)
+
+
+def test_stricter_alpha_is_harder_to_fail():
+    results = {i: (0.0, 0.5) for i in range(9)}
+    results[9] = (5.0, 2e-4)
+    assert sequential_verdict(results, 10, alpha=0.05).decision == FAIL
+    assert sequential_verdict(results, 10, alpha=0.001).decision == PASS

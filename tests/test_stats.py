@@ -25,6 +25,7 @@ def _suspects(ps):
     return int(((ps < 1e-4) | (ps > 1 - 1e-4)).sum())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("gen", ["splitmix64", "threefry", "pcg32",
                                  "xorshift64s", "mwc", "msweyl", "lcg64"])
 def test_good_generators_pass(entries, gen):
@@ -32,12 +33,14 @@ def test_good_generators_pass(entries, gen):
     assert _suspects(ps) == 0, np.asarray(ps)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("gen,min_fail", [("randu", 2), ("minstd", 1)])
 def test_bad_generators_fail(entries, gen, min_fail):
     _, ps = run_sequential(entries, 9, G.GEN_IDS[gen])
     assert _suspects(ps) >= min_fail
 
 
+@pytest.mark.slow
 def test_pvalues_roughly_uniform(entries):
     """Meta-test: pooled good-generator p-values are not clustered."""
     allp = []
@@ -70,6 +73,39 @@ def test_counter_offset_continuation():
         a = np.asarray(G.splitmix64_block(5, 1, 64))
         b = np.asarray(G.splitmix64_block(5, 1, 64, offset=64))
     assert (full == np.concatenate([a, b])).all()
+
+
+@pytest.mark.parametrize("gen", G.COUNTER_BASED)
+@given(seed=st.integers(0, 2 ** 16), stream=st.integers(0, 2 ** 16),
+       k=st.integers(1, 96))
+@settings(max_examples=10, deadline=None)
+def test_counter_offset_continuation_all(gen, seed, stream, k):
+    """The continuation property must hold for EVERY counter-based
+    generator at arbitrary split points, not just splitmix64 at 64."""
+    fn = G.GENERATORS[gen]
+    with G.x64():
+        full = np.asarray(fn(seed, stream, 2 * k))
+        a = np.asarray(fn(seed, stream, k))
+        b = np.asarray(fn(seed, stream, k, offset=k))
+    assert (full == np.concatenate([a, b])).all(), (gen, seed, stream, k)
+
+
+@pytest.mark.parametrize("gen", G.COUNTER_BASED)
+@given(seed=st.integers(0, 1000),
+       streams=st.sets(st.integers(0, 10000), min_size=2, max_size=5))
+@settings(max_examples=10, deadline=None)
+def test_streams_pairwise_disjoint_first_k(gen, seed, streams):
+    """Distinct streams of the same generator must produce pairwise
+    distinct first-k word blocks — sub-jobs drawing 'fresh' sub-streams
+    genuinely get fresh bits (pool.stream_table's contract)."""
+    k = 64
+    fn = G.GENERATORS[gen]
+    with G.x64():
+        blocks = {s: np.asarray(fn(seed, s, k)) for s in streams}
+    items = sorted(blocks)
+    for i, s1 in enumerate(items):
+        for s2 in items[i + 1:]:
+            assert (blocks[s1] != blocks[s2]).any(), (gen, seed, s1, s2)
 
 
 def test_lcg_jump_matches_sequential():
