@@ -14,10 +14,8 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
-import numpy as np                                    # noqa: E402
-
-from repro.ckpt import io as ckpt_io                  # noqa: E402
-from repro.core.api import PoolSession, RunSpec       # noqa: E402
+from repro.core.api import (                          # noqa: E402
+    Checkpoint, PoolSession, RunSpec)
 
 CKPT = "/tmp/bigcrush_progress.ck"
 SCALE = 0.03125
@@ -45,9 +43,7 @@ print(f"\nfirst run: {res1.rounds_run} rounds, {res1.wall_s:.1f}s "
 
 # --- phase 2: knock three results out of the checkpoint ("node failures"),
 # restart, and watch only the missing tests re-run — on the CACHED program
-idx, st, pv = ckpt_io.load_flat(CKPT)
-keep = ~np.isin(idx, [5, 50, 100])
-ckpt_io.save(CKPT, [idx[keep], st[keep], pv[keep]])
+Checkpoint.load(CKPT).drop([5, 50, 100]).save(CKPT)
 run2 = session.submit(spec)
 status = run2.status()
 print(f"restart: {status['jobs_total'] - status['jobs_done']} jobs missing, "

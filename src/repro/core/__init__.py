@@ -5,6 +5,7 @@
 from repro.core.api import (  # noqa: F401
     BatteryResult,
     BatteryRun,
+    Checkpoint,
     PoolSession,
     RunResult,
     RunSpec,

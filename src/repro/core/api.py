@@ -14,7 +14,13 @@ The paper's orchestration layer (`master`/`makesub`/`condor_submit`/
                    runtime arguments, so repeated submits — different
                    generators, different seeds, replans after
                    hold/release — reuse the same jitted executable
-                   instead of re-tracing.
+                   instead of re-tracing. Pool width is a RUNTIME
+                   property: ``resize(n)`` (and ``grow()``/``shrink()``
+                   sugar — condor machines joining/vacating) swaps the
+                   mesh, and live runs replan their remaining rounds
+                   onto the new width at the next round boundary.
+                   Executables for other widths stay cached — resizing
+                   back is a cache hit, not a recompile (DESIGN.md §6).
   ``BatteryRun``   the submit handle, with HTCondor-shaped verbs:
                    ``poll()`` advances/reports one round, ``held()``
                    lists jobs with missing/invalid results, ``release()``
@@ -168,29 +174,137 @@ class BatteryResult:
 
 
 # ---------------------------------------------------------------------------
+# checkpoint layout (v3: job-id keyed, worker-count independent)
+
+CKPT_VERSION = 3
+
+
+@dataclasses.dataclass
+class Checkpoint:
+    """On-disk battery progress — v3, keyed by JOB ID, never by
+    (round, worker) position. The layout is a pure function of the job
+    table, so a checkpoint written on a W=8 mesh resumes bitwise on W=4
+    (or any width) after elastic re-meshing (DESIGN.md §6).
+
+    Wire layouts (``ckpt/io`` leaves)::
+
+      v3 (written): [version, job_idx (K,), stats (G, K), ps (G, K),
+                     decisions (G,) int8 — empty when absent, rounds_run,
+                     alpha — nan when absent]
+      v2 (read):    [job_idx, stats, ps, decisions, rounds_run]
+      v1 (read):    [job_idx, stats, ps]    (stats flat for one generator)
+
+    Loading a v1/v2 file works transparently; the next save upgrades it
+    to v3. ``decisions`` carries the sequential-verdict codes (see
+    ``BatteryRun._DECISION_CODE``); ``None`` means no verdict state.
+    ``alpha`` records which error rate the decisions were computed
+    under — a resuming run adopts them only when its own alpha matches
+    (they are a pure function of (results, alpha))."""
+    job_idx: np.ndarray                         # (K,) int32 job ids
+    stats: np.ndarray                           # (G, K) float64
+    ps: np.ndarray                              # (G, K) float64
+    decisions: Optional[np.ndarray] = None      # (G,) int8 verdict codes
+    rounds_run: int = 0
+    alpha: Optional[float] = None               # decisions' error rate
+    version: int = CKPT_VERSION
+
+    @property
+    def n_generators(self) -> int:
+        return int(self.stats.shape[0])
+
+    @classmethod
+    def load(cls, path: str) -> "Checkpoint":
+        leaves = ckpt_io.load_flat(path)
+        if len(leaves) == 7:                    # v3
+            ver, idx, st, pv, dec, rounds, alpha = leaves
+            if int(ver) != CKPT_VERSION:
+                raise ValueError(
+                    f"checkpoint {path} declares version {int(ver)}; "
+                    f"this build reads v1/v2/v{CKPT_VERSION}")
+            dec = np.asarray(dec, np.int8)
+            alpha = float(alpha)
+            return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
+                       np.atleast_2d(pv), dec if dec.size else None,
+                       int(rounds),
+                       None if np.isnan(alpha) else alpha, CKPT_VERSION)
+        if len(leaves) == 5:                    # v2: verdict state present
+            idx, st, pv, dec, rounds = leaves
+            return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
+                       np.atleast_2d(pv),
+                       np.atleast_1d(np.asarray(dec, np.int8)),
+                       int(rounds), None, 2)
+        if len(leaves) == 3:                    # v1: classic results-only
+            idx, st, pv = leaves
+            return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
+                       np.atleast_2d(pv), None, 0, None, 1)
+        raise ValueError(
+            f"checkpoint {path} has {len(leaves)} leaves; expected 3 (v1), "
+            f"5 (v2) or 7 (v{CKPT_VERSION})")
+
+    def save(self, path: str) -> None:
+        """Write the v3 layout (whatever version was loaded)."""
+        dec = (np.zeros((0,), np.int8) if self.decisions is None
+               else np.asarray(self.decisions, np.int8))
+        ckpt_io.save(path, [
+            np.int64(CKPT_VERSION), np.asarray(self.job_idx, np.int32),
+            np.atleast_2d(np.asarray(self.stats, np.float64)),
+            np.atleast_2d(np.asarray(self.ps, np.float64)),
+            dec, np.int64(self.rounds_run),
+            np.float64(np.nan if self.alpha is None else self.alpha)])
+
+    def drop(self, job_ids) -> "Checkpoint":
+        """A copy with the given jobs knocked out (simulated node loss /
+        checkpoint surgery). Verdict state is discarded — decisions are a
+        function of the full result set, and a resumed run recomputes
+        them from what survives."""
+        keep = ~np.isin(self.job_idx, np.asarray(list(job_ids), np.int32))
+        return dataclasses.replace(
+            self, job_idx=self.job_idx[keep], stats=self.stats[:, keep],
+            ps=self.ps[:, keep], decisions=None, version=CKPT_VERSION)
+
+    def results(self) -> List[Dict[int, tuple]]:
+        """Per-generator {job_id: (stat, p)} — the in-memory form."""
+        return [{int(i): (float(s), float(p))
+                 for i, s, p in zip(self.job_idx, self.stats[g], self.ps[g])}
+                for g in range(self.n_generators)]
+
+
+# ---------------------------------------------------------------------------
 # session + compile cache
 
 
 @dataclasses.dataclass
 class _Compiled:
-    """One compile-cache slot: job table + lazily built runners."""
+    """One job-table slot: the width-INDEPENDENT battery/job tables plus
+    the jitted runners, keyed ``(n_workers, n_generators)``. One table
+    serves every pool width — job identity must never depend on width
+    (that is what makes checkpoints and resizes reconcile, DESIGN.md §6)
+    — so a resize adds runner entries, never a second table, and a live
+    run's captured slot IS the slot every dispatch compiles against."""
     entries: List[TestEntry]        # original battery (test space)
     jobs: List[TestEntry]           # possibly decomposed (job space)
     costs: List[float]
     combine: str
-    runners: dict                   # n_generators -> jitted round fn
+    runners: dict                   # (n_workers, n_generators) -> jitted fn
 
 
 class PoolSession:
     """Owns the mesh and the compile cache. Build one session, submit many
     specs; runs against the same ``(battery, scale, n_workers)`` share one
-    jitted round program (generator/seed are runtime arguments)."""
+    jitted round program (generator/seed are runtime arguments).
+
+    Pool width is a runtime property (the paper's opportunistic pool:
+    machines join when idle, vacate when their owner returns) —
+    ``resize``/``grow``/``shrink`` re-mesh mid-run. Each width owns its
+    own mesh and cache entries, so bouncing 8 -> 4 -> 8 recompiles only
+    the 4-wide program and returns to the 8-wide executables for free."""
 
     def __init__(self, mesh=None, n_workers: Optional[int] = None):
         if mesh is None:
             from repro.launch.mesh import make_pool_mesh
             mesh = make_pool_mesh(n_workers)
         self.mesh = mesh
+        self._meshes: Dict[int, object] = {int(mesh.devices.size): mesh}
         self._cache: Dict[tuple, _Compiled] = {}
         self.trace_counts: Dict[tuple, int] = {}
 
@@ -198,22 +312,61 @@ class PoolSession:
     def n_workers(self) -> int:
         return int(self.mesh.devices.size)
 
+    def resize(self, n_workers: int) -> int:
+        """Elastic re-meshing: set the pool width to ``n_workers``.
+        Live ``BatteryRun``s replan their remaining rounds onto the new
+        width at their next round boundary (completed results, verdict
+        state and sub-stream assignments are all width-independent, so
+        nothing is lost or re-executed needlessly). Compiled programs
+        for other widths stay cached. Returns the new width."""
+        n = int(n_workers)
+        if n < 1:
+            raise ValueError(f"pool width must be >= 1, got {n}")
+        if n != self.n_workers:
+            mesh = self._meshes.get(n)
+            if mesh is None:
+                from repro.launch.mesh import make_pool_mesh
+                mesh = make_pool_mesh(n)
+                self._meshes[n] = mesh
+            self.mesh = mesh
+        return self.n_workers
+
+    def grow(self, n: int = 1) -> int:
+        """``n`` machines joined the pool (condor: owner went idle)."""
+        return self.resize(self.n_workers + n)
+
+    def shrink(self, n: int = 1) -> int:
+        """``n`` machines vacated (condor: owner came back)."""
+        return self.resize(self.n_workers - n)
+
     @property
     def total_traces(self) -> int:
         return sum(self.trace_counts.values())
 
     def cache_key(self, spec: RunSpec) -> tuple:
+        """Trace-accounting key: one entry per compiled pool width."""
         policy = get_policy(spec.policy)
         return (spec.battery, float(spec.scale), self.n_workers,
                 policy.signature())
 
+    def _table_key(self, spec: RunSpec) -> tuple:
+        """Job-table key — deliberately WITHOUT the pool width: the table
+        is a pure function of (battery, scale, decomposition)."""
+        policy = get_policy(spec.policy)
+        return (spec.battery, float(spec.scale), policy.signature())
+
     def _compiled(self, spec: RunSpec) -> _Compiled:
-        key = self.cache_key(spec)
+        key = self._table_key(spec)
         hit = self._cache.get(key)
         if hit is None:
             entries = build_battery(spec.battery, spec.scale)
             policy = get_policy(spec.policy)
-            jobs = policy.decompose(entries, self.n_workers) or entries
+            # decompose is invoked WITHOUT the pool width: the job table
+            # is shared across widths (checkpoint job ids and live runs
+            # survive resize only because of that), so a width-dependent
+            # decomposition is impossible by construction, not by
+            # convention (SchedulePolicy protocol, DESIGN.md §6)
+            jobs = policy.decompose(entries, None) or entries
             combine = getattr(policy, "combine", "stouffer")
             hit = _Compiled(entries, jobs, [j.cost for j in jobs],
                             combine, {})
@@ -221,20 +374,22 @@ class PoolSession:
         return hit
 
     def _runner(self, spec: RunSpec, n_gens: Optional[int] = None):
-        """The jitted round program for this spec's shape (G generators).
-        ``n_gens`` overrides the spec's width — adaptive runs shrink the
-        vmapped gen_ids axis as failed generators drop out, and each
-        surviving width is its own cached executable."""
+        """The jitted round program for this spec's shape: the current
+        pool width x G generators. ``n_gens`` overrides the spec's width —
+        adaptive runs shrink the vmapped gen_ids axis as failed generators
+        drop out — and each (width, G) pair is its own cached executable,
+        so resizing back to a width seen before recompiles nothing."""
         key = self.cache_key(spec)
         compiled = self._compiled(spec)
         g = spec.n_generators if n_gens is None else n_gens
-        runner = compiled.runners.get(g)
+        rk = (self.n_workers, g)
+        runner = compiled.runners.get(rk)
         if runner is None:
             def on_trace():
                 self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
             make = make_round_runner if g == 1 else make_fanout_runner
             runner = make(compiled.jobs, self.mesh, on_trace=on_trace)
-            compiled.runners[g] = runner
+            compiled.runners[rk] = runner
         return runner
 
     def entries(self, spec: RunSpec) -> List[TestEntry]:
@@ -315,6 +470,25 @@ class BatteryRun:
         self._queue.extend(np.asarray(row, np.int32)
                            for row in plan.assignment)
 
+    def _sync_width(self) -> None:
+        """Elastic re-meshing: if the session was resized since this run's
+        pending rounds were planned, replan the residual job set onto the
+        new width at this round boundary. Completed results are untouched —
+        job identity is width-independent (``pool.stream_table``), so the
+        replan changes placement only, never which work remains."""
+        w = self.session.n_workers
+        if not self._queue or self._queue[0].shape[0] == w:
+            return
+        residual = sorted({int(j) for row in self._queue
+                           for j in row if j >= 0})
+        self._queue.clear()
+        if residual:
+            self._enqueue(residual)
+            if self.spec.progress:
+                print(f"  pool resized to {w} worker(s): {len(residual)} "
+                      f"residual job(s) replanned onto "
+                      f"{len(self._queue)} round(s)", flush=True)
+
     # -- HTCondor verbs ----------------------------------------------------
 
     @property
@@ -330,7 +504,10 @@ class BatteryRun:
         generator) and report status — the paper's `master` polling
         `empty`. With ``stop_on_verdict`` each poll is also an interim
         look: decided generators leave the gen_ids axis, and the queue is
-        dropped entirely once no generator remains undecided."""
+        dropped entirely once no generator remains undecided. A session
+        ``resize()`` since the last poll is absorbed here: the residual
+        rounds replan onto the new width before anything dispatches."""
+        self._sync_width()
         self._auto_cancel()
         if self._queue:
             row = self._queue.pop(0)
@@ -502,6 +679,12 @@ class BatteryRun:
     _DECISION_CODE = {stitch.UNDECIDED: 0, stitch.PASS: 1, stitch.FAIL: 2}
 
     def _save_checkpoint(self) -> None:
+        """Write the v3 layout: results keyed by JOB ID (never by the
+        (round, worker) position of the dispatch that produced them), so
+        the file is a pure function of the job table and resumes on any
+        pool width. Verdict state always rides along; ``rounds_run`` is
+        adopted on resume only by ``stop_on_verdict`` runs (their round
+        count is part of the sequential-look bookkeeping)."""
         path = self.spec.checkpoint_path
         if not path:
             return
@@ -511,50 +694,40 @@ class BatteryRun:
                        for r in self._results], np.float64)
         pv = np.array([[r.get(int(i), (np.nan, np.nan))[1] for i in idx]
                        for r in self._results], np.float64)
-        if self.spec.stop_on_verdict:
-            # v2 layout: verdict state rides along, so a resumed run knows
-            # which generators were already decided (and how many rounds
-            # the original run spent getting there) without re-executing
-            decisions = np.array([self._DECISION_CODE[v.decision]
-                                  for v in self._verdicts], np.int8)
-            ckpt_io.save(path, [idx, st, pv, decisions,
-                                np.int64(self.rounds_run)])
-        elif self.spec.n_generators == 1:   # classic single-gen flat layout
-            ckpt_io.save(path, [idx, st[0], pv[0]])
-        else:
-            ckpt_io.save(path, [idx, st, pv])
+        decisions = np.array([self._DECISION_CODE[v.decision]
+                              for v in self._verdicts], np.int8)
+        Checkpoint(idx, st, pv, decisions, self.rounds_run,
+                   alpha=self.spec.alpha).save(path)
 
     def _load_checkpoint(self) -> None:
         path = self.spec.checkpoint_path
         if not (path and ckpt_io.exists(path)):
             return
-        leaves = ckpt_io.load_flat(path)
-        if len(leaves) == 5:                # v2: verdict state present
-            idx, st, pv, decisions, rounds = leaves
-            self._restored_decisions = [int(d) for d in np.atleast_1d(decisions)]
-            self.rounds_run = int(rounds)
-        elif len(leaves) == 3:              # classic results-only layout
-            idx, st, pv = leaves
-            self._restored_decisions = None
-        else:
+        ck = Checkpoint.load(path)          # v1/v2 upgrade path lives here
+        # Saved decisions are BINDING only for a stop_on_verdict run that
+        # uses the SAME alpha they were computed under — there they drive
+        # scheduling (decided generators are never re-enqueued) and the
+        # round count is sequential-look bookkeeping, and the cross-check
+        # catches tampering. Under any other (spec, alpha) they are
+        # advisory: verdicts are a pure function of (results, alpha), so
+        # the resumed run just recomputes them fresh. v2 files predate
+        # the recorded alpha (ck.alpha is None) and keep their
+        # documented refuse-on-mismatch behavior.
+        if (ck.decisions is not None and self.spec.stop_on_verdict
+                and (ck.alpha is None or ck.alpha == self.spec.alpha)):
+            self._restored_decisions = [int(d) for d in ck.decisions]
+            self.rounds_run = ck.rounds_run
+        if ck.n_generators != self.spec.n_generators:
             raise ValueError(
-                f"checkpoint {path} has {len(leaves)} leaves; expected 3 "
-                "(classic) or 5 (verdict-state v2)")
-        st = np.atleast_2d(st)
-        pv = np.atleast_2d(pv)
-        if st.shape[0] != self.spec.n_generators:
+                f"checkpoint {path} holds {ck.n_generators} generator "
+                f"row(s), spec has {self.spec.n_generators}")
+        if len(ck.job_idx) and int(np.max(ck.job_idx)) >= len(self._compiled.jobs):
             raise ValueError(
-                f"checkpoint {path} holds {st.shape[0]} generator row(s), "
-                f"spec has {self.spec.n_generators}")
-        if len(idx) and int(np.max(idx)) >= len(self._compiled.jobs):
-            raise ValueError(
-                f"checkpoint {path} references job {int(np.max(idx))} but "
-                f"this spec's job table has {len(self._compiled.jobs)} "
+                f"checkpoint {path} references job {int(np.max(ck.job_idx))} "
+                f"but this spec's job table has {len(self._compiled.jobs)} "
                 "entries — it was written by a different battery/scale/"
                 "decomposition")
-        for g in range(st.shape[0]):
-            self._results[g] = {int(i): (float(s), float(p))
-                                for i, s, p in zip(idx, st[g], pv[g])}
+        self._results = ck.results()
 
     # -- stitching ---------------------------------------------------------
 

@@ -172,7 +172,9 @@ def build_battery(name: str, scale: float = 1.0) -> List[TestEntry]:
 
 
 def max_words(entries: List[TestEntry]) -> int:
-    return max(e.n_words for e in entries)
+    """Widest bit-block any entry consumes; 0 for an empty table (an
+    elastic replan of nothing must not raise)."""
+    return max((e.n_words for e in entries), default=0)
 
 
 def split_entry(entry: TestEntry, n_parts: int,

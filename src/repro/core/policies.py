@@ -95,13 +95,21 @@ def _finish_plan(a: np.ndarray, costs: np.ndarray, n_workers: int,
 @runtime_checkable
 class SchedulePolicy(Protocol):
     """Placement strategy. ``decompose`` returning None means the job
-    table is the battery's entry list unchanged."""
+    table is the battery's entry list unchanged.
+
+    ``decompose`` must be a pure function of the battery: the session
+    invokes it with ``n_workers=None`` (the argument survives for
+    signature compatibility only), because one job table serves every
+    pool width — job ids, sub-stream assignments and checkpoints all
+    have to survive elastic re-meshing (DESIGN.md §6). Width-aware
+    placement belongs in ``plan``, which does get ``n_workers``."""
     name: str
 
     def plan(self, costs: Sequence[float], n_workers: int) -> Plan:
         ...
 
-    def decompose(self, entries, n_workers: int) -> Optional[list]:
+    def decompose(self, entries, n_workers: Optional[int] = None
+                  ) -> Optional[list]:
         ...
 
     def signature(self) -> Optional[tuple]:
@@ -167,6 +175,8 @@ class OverDecomposePolicy:
 
     def decompose(self, entries, n_workers=None):
         from repro.core.battery import split_entry
+        if not entries:                         # replan of nothing: no table
+            return None
         costs = np.asarray([e.cost for e in entries], np.float64)
         cut = self.threshold * max(float(costs.mean()), 1e-12)
         jobs = []

@@ -44,14 +44,24 @@ from repro.rng.generators import gen_block_by_id, x64
 def stream_table(entries: List[TestEntry]) -> np.ndarray:
     """Per-job generator stream ids. Identity for an unsplit battery;
     sub-jobs get ``group + n_groups * part`` — unique, deterministic, and
-    independent of worker count or plan."""
+    independent of worker count or plan. An empty job table (a replan of
+    nothing after elastic re-meshing) yields an empty table, not a
+    ``max()`` crash."""
+    if not entries:
+        return np.zeros((0,), np.int32)
     n_groups = max(e.group for e in entries) + 1
     return np.asarray([e.group + n_groups * e.part for e in entries],
                       np.int32)
 
 
 def _job_fn(entries: List[TestEntry], n_words: int):
-    """(job_id, seed, gen_id) -> (stat, p). job_id == -1 -> idle."""
+    """(job_id, seed, gen_id) -> (stat, p). job_id == -1 -> idle.
+
+    Idle slots skip generation entirely: the bit block is produced under
+    a ``lax.cond``, so a padded round on a wide mesh pays nothing for its
+    empty slots instead of generating (and discarding) a full ``n_words``
+    block. The predicate is per-shard scalar, so the cond survives the
+    fan-out vmap over generators as a real branch, not a select."""
     branches = [lambda bits, e=e: tuple(
         jnp.asarray(v, jnp.float32) for v in e.kernel(bits))
         for e in entries]
@@ -60,8 +70,15 @@ def _job_fn(entries: List[TestEntry], n_words: int):
 
     def run(job_id, seed, gen_id):
         stream = streams[jnp.clip(job_id, 0, len(entries) - 1)]
-        with x64():
-            bits = gen_block_by_id(gen_id, seed, stream, n_words)
+
+        def generate(_):
+            with x64():
+                return gen_block_by_id(gen_id, seed, stream, n_words)
+
+        def idle(_):
+            return jnp.zeros((n_words,), jnp.uint32)
+
+        bits = jax.lax.cond(job_id < 0, idle, generate, None)
         idx = jnp.where(job_id < 0, len(entries), job_id)
         return jax.lax.switch(jnp.clip(idx, 0, len(entries)), branches, bits)
 

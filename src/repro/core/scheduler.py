@@ -41,7 +41,16 @@ def replan(missing: Sequence[int], costs: Sequence[float],
            entries: Sequence = None) -> Plan:
     """Plan covering only `missing` job indices (hold/release retry rounds,
     elastic re-meshing after worker loss, and adaptive resumes — the
-    priority order is recomputed over just the still-missing entries)."""
+    priority order is recomputed over just the still-missing entries).
+
+    An empty ``missing`` set (every job already done when a resize
+    triggers a replan) yields a zero-round plan — the run just completes,
+    instead of the old ``ValueError: max() arg is an empty sequence``
+    from the empty residual job table downstream."""
+    missing = list(missing)
+    if not missing:
+        return Plan(np.zeros((0, n_workers), np.int32),
+                    get_policy(mode).name, 0.0, 0.0)
     sub_entries = ([entries[i] for i in missing]
                    if entries is not None else None)
     sub = make_plan([costs[i] for i in missing], n_workers, mode,

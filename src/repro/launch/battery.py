@@ -16,6 +16,13 @@ adaptive schedule policy front-loads cheap discriminating tests, the
 sequential verdict engine (alpha from ``--alpha``) decides
 PASS/FAIL/UNDECIDED after every round, and pending rounds for a
 definitively-failed generator are cancelled instead of dispatched.
+
+``--resize-at ROUND:WIDTH[,ROUND:WIDTH...]`` demonstrates elastic
+re-meshing (the paper's opportunistic pool — machines join and vacate
+mid-battery): after the given round the pool is resized to WIDTH and
+the remaining rounds replan onto it, e.g. ``--resize-at 2:4,5:8`` for a
+pool that shrinks to 4 workers after round 2 and grows back to 8 after
+round 5. Stitched p-values are bitwise identical to a fixed-width run.
 """
 import argparse
 import json
@@ -46,6 +53,10 @@ def main():
                          "engine spends across the battery")
     ap.add_argument("--retries", type=int, default=2)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resize-at", dest="resize_at", default=None,
+                    help="comma-separated ROUND:WIDTH pairs — resize the "
+                         "pool to WIDTH workers once ROUND rounds have "
+                         "run (elastic re-meshing demo)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write a machine-readable report to this path")
     args = ap.parse_args()
@@ -54,10 +65,23 @@ def main():
             ap.error(f"--adaptive selects the adaptive schedule policy; "
                      f"it cannot be combined with --policy {args.policy}")
         args.policy = "adaptive"
+    resize_at = {}
+    if args.resize_at:
+        try:
+            for tok in args.resize_at.split(","):
+                rnd, width = tok.strip().split(":")
+                resize_at[int(rnd)] = int(width)
+        except ValueError:
+            ap.error(f"--resize-at wants ROUND:WIDTH[,ROUND:WIDTH...], "
+                     f"got {args.resize_at!r}")
+        if any(w < 1 for w in resize_at.values()):
+            ap.error("--resize-at widths must be >= 1")
 
-    if args.workers > 1 and "XLA_FLAGS" not in os.environ:
+    # the forced host-device pool must cover the widest point of the run
+    need = max([args.workers] + list(resize_at.values()))
+    if need > 1 and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = \
-            f"--xla_force_host_platform_device_count={args.workers}"
+            f"--xla_force_host_platform_device_count={need}"
 
     from repro.core import stitch                     # noqa: E402 (after env)
     from repro.core.api import (                      # noqa: E402
@@ -67,6 +91,7 @@ def main():
 
     gens = tuple(g.strip() for g in args.gen.split(",") if g.strip())
     session = PoolSession(mesh=make_pool_mesh(args.workers or None))
+    launch_workers = session.n_workers          # width before any resize
     spec = RunSpec(args.battery, generators=gens, seeds=(args.seed,),
                    scale=args.scale, policy=args.policy,
                    retry=RetryPolicy(max_retries=args.retries),
@@ -77,6 +102,16 @@ def main():
           + (f" adaptive(alpha={args.alpha})" if args.adaptive else ""))
 
     handle = session.submit(spec)
+    resizes = []
+    for rnd in sorted(resize_at):               # elastic re-meshing demo
+        while handle.pending_rounds and handle.rounds_run < rnd:
+            handle.poll()
+        if handle.pending_rounds:
+            session.resize(resize_at[rnd])
+            resizes.append({"round": handle.rounds_run,
+                            "workers": resize_at[rnd]})
+            print(f"  resize: pool -> {resize_at[rnd]} workers after "
+                  f"round {handle.rounds_run}")
     res = handle.result()
     multi = isinstance(res, BatteryResult)
     runs = res.runs if multi else {gens[0]: res}
@@ -92,8 +127,9 @@ def main():
         entries = session.entries(spec)
         payload = {
             "battery": args.battery, "scale": args.scale,
-            "workers": session.n_workers, "policy": args.policy,
+            "workers": launch_workers, "policy": args.policy,
             "adaptive": args.adaptive, "alpha": args.alpha,
+            "resizes": resizes,
             "seed": args.seed, "wall_s": round(res.wall_s, 3),
             "rounds_run": res.rounds_run, "retries": res.retries,
             "plan_rounds": next(iter(runs.values())).plan_rounds,

@@ -34,7 +34,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_pool_mesh(n_workers: int | None = None):
-    """Flat 1-D mesh for the battery pool ('workers' axis)."""
+    """Flat 1-D mesh for the battery pool ('workers' axis).
+
+    ``PoolSession.resize`` calls this for every width the pool bounces
+    through, so the width must be validated here — a clear error beats
+    ``make_mesh`` failing on a short device slice."""
     devices = jax.devices()
     n = n_workers or len(devices)
+    if n < 1:
+        raise ValueError(f"pool width must be >= 1, got {n}")
+    if n > len(devices):
+        raise RuntimeError(
+            f"pool of {n} workers needs {n} devices, have {len(devices)}; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before importing jax (dry-run only)")
     return make_mesh((n,), ("workers",), devices=devices[:n])

@@ -6,9 +6,8 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.ckpt import io as ckpt_io
 from repro.core import stitch
-from repro.core.api import BatteryResult, PoolSession, RunSpec
+from repro.core.api import BatteryResult, Checkpoint, PoolSession, RunSpec
 from repro.core.battery import build_battery, split_entry
 from repro.core.policies import (
     OverDecomposePolicy,
@@ -105,9 +104,7 @@ def test_checkpoint_resume_runs_only_missing(tmp_path):
     res1 = session.submit(spec).result()
     assert res1.rounds_run > 0
 
-    idx, st, pv = ckpt_io.load_flat(ck)
-    keep = ~np.isin(idx, [2, 8])
-    ckpt_io.save(ck, [idx[keep], st[keep], pv[keep]])
+    Checkpoint.load(ck).drop([2, 8]).save(ck)
 
     run2 = session.submit(spec)
     status = run2.status()
