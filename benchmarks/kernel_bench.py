@@ -27,18 +27,23 @@ def run(rows):
 
     key = jax.random.PRNGKey(0)
     mats = jax.random.bits(key, (1024, 32), jnp.uint32)
-    rows.append(("kernel_gf2_rank_interp", _t(rank32, mats), "1024_mats"))
+    # interpret=True pinned: the ops default is now "auto" (compiled on a
+    # real TPU), and these rows are explicitly interpreter timings
+    rows.append(("kernel_gf2_rank_interp",
+                 _t(lambda m: rank32(m, interpret=True), mats), "1024_mats"))
     rows.append(("kernel_gf2_rank_ref", _t(jax.jit(gf2_rank_ref), mats), ""))
 
     idx = jax.random.randint(key, (65536,), 0, 64)
-    rows.append(("kernel_histogram_interp", _t(lambda x: bincount(x, 64), idx),
+    rows.append(("kernel_histogram_interp",
+                 _t(lambda x: bincount(x, 64, interpret=True), idx),
                  "64_bins_65536"))
     rows.append(("kernel_histogram_ref",
                  _t(jax.jit(lambda x: histogram_ref(x, 64)), idx), ""))
 
     q = jax.random.normal(key, (1, 512, 4, 64))
     rows.append(("kernel_flash_attn_interp",
-                 _t(lambda a: mha(a, a, a, scale=0.125), q), "s512_h4_d64"))
+                 _t(lambda a: mha(a, a, a, scale=0.125, interpret=True), q),
+                 "s512_h4_d64"))
     qf = q.transpose(0, 2, 1, 3).reshape(4, 512, 64)
     rows.append(("kernel_flash_attn_ref",
                  _t(jax.jit(lambda a: attention_ref(a, a, a, scale=0.125)),

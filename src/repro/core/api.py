@@ -63,6 +63,7 @@ from repro.core.policies import RetryPolicy, SchedulePolicy, get_policy
 from repro.core.pool import make_fanout_runner, make_round_runner
 from repro.core.scheduler import make_plan, replan
 from repro.rng.generators import GEN_IDS
+from repro.stats import backends as kernel_backends
 
 # Battery presets (the folded BatteryConfig from common/config.py):
 # test count and the sample-size multiplier of the paper-sized run.
@@ -84,7 +85,13 @@ class RunSpec:
     ``alpha`` is the family-wise error rate the sequential verdict engine
     spends across the battery (stitch.sequential_verdict);
     ``stop_on_verdict=True`` cancels pending work for a generator as soon
-    as its verdict is definitive."""
+    as its verdict is definitive.
+
+    ``backend`` selects the test-kernel implementation family-wide
+    (stats/backends.py): "reference" (pure-jnp), "accelerated" (Pallas
+    kernels) or "auto" (accelerated on real TPU hardware, reference under
+    interpret/CPU). Both backends share one ``bits -> (stat, p)``
+    contract and stitch identical verdicts (tests/test_backends.py)."""
     battery: str
     generators: Union[str, Tuple[str, ...]] = ("splitmix64",)
     seeds: Union[int, Tuple[int, ...]] = (0,)
@@ -95,6 +102,7 @@ class RunSpec:
     progress: bool = False
     alpha: float = 0.01
     stop_on_verdict: bool = False
+    backend: str = "auto"
 
     def __post_init__(self):
         if self.battery not in BATTERY_SIZES:
@@ -119,6 +127,9 @@ class RunSpec:
         get_policy(self.policy)                  # validate early
         if not (0.0 < self.alpha < 1.0):
             raise ValueError(f"alpha must be in (0, 1), got {self.alpha}")
+        if self.backend not in kernel_backends.BACKENDS:
+            raise KeyError(f"unknown backend {self.backend!r}; "
+                           f"known: {kernel_backends.BACKENDS}")
 
     @classmethod
     def preset(cls, battery: str, **overrides) -> "RunSpec":
@@ -344,22 +355,28 @@ class PoolSession:
         return sum(self.trace_counts.values())
 
     def cache_key(self, spec: RunSpec) -> tuple:
-        """Trace-accounting key: one entry per compiled pool width."""
+        """Trace-accounting key: one entry per compiled pool width. The
+        RESOLVED kernel backend is part of the key — reference and
+        accelerated job tables compile different programs, while "auto"
+        shares the slot of whatever it resolves to."""
         policy = get_policy(spec.policy)
         return (spec.battery, float(spec.scale), self.n_workers,
-                policy.signature())
+                policy.signature(), kernel_backends.resolve(spec.backend))
 
     def _table_key(self, spec: RunSpec) -> tuple:
         """Job-table key — deliberately WITHOUT the pool width: the table
-        is a pure function of (battery, scale, decomposition)."""
+        is a pure function of (battery, scale, decomposition, backend)."""
         policy = get_policy(spec.policy)
-        return (spec.battery, float(spec.scale), policy.signature())
+        return (spec.battery, float(spec.scale), policy.signature(),
+                kernel_backends.resolve(spec.backend))
 
     def _compiled(self, spec: RunSpec) -> _Compiled:
         key = self._table_key(spec)
         hit = self._cache.get(key)
         if hit is None:
-            entries = build_battery(spec.battery, spec.scale)
+            entries = build_battery(spec.battery, spec.scale,
+                                    backend=kernel_backends.resolve(
+                                        spec.backend))
             policy = get_policy(spec.policy)
             # decompose is invoked WITHOUT the pool width: the job table
             # is shared across widths (checkpoint job ids and live runs

@@ -12,7 +12,7 @@ import dataclasses
 import functools
 from typing import Callable, List
 
-from repro.stats import tests as T
+from repro.stats import backends as B
 
 # relative per-word cost weights (scan-heavy kernels cost more per word)
 KERNEL_WEIGHT = {
@@ -56,6 +56,8 @@ class TestEntry:
     #                             unless this entry is a sub-job)
     part: int = 0               # sub-job position within its group
     n_parts: int = 1            # group size (1 = not decomposed)
+    backend: str = "reference"  # kernel backend the callable is bound to
+    #                             (stats/backends.py registry)
 
     def __post_init__(self):
         if self.group < 0:
@@ -76,14 +78,15 @@ _WORDS = {
 }
 
 
-def _mk(index, kname, scale, **kw):
-    fn = T.KERNELS[kname]
+def _mk(index, kname, scale, backend="reference", **kw):
+    fn = B.get_kernel(kname, backend)
     words = _WORDS[kname](kw)
     name = kname + ("" if not kw else "_" + "_".join(
         f"{a}{v}" for a, v in sorted(kw.items())))
     return TestEntry(index, name, functools.partial(fn, **kw), words,
                      words * KERNEL_WEIGHT[kname] * scale,
-                     kname=kname, params=tuple(sorted(kw.items())))
+                     kname=kname, params=tuple(sorted(kw.items())),
+                     backend=backend)
 
 
 _BASE = [  # SmallCrush: one instance of each kernel (explicit params so
@@ -146,7 +149,12 @@ def _scaled(kw, kname, scale):
     return kw
 
 
-def build_battery(name: str, scale: float = 1.0) -> List[TestEntry]:
+def build_battery(name: str, scale: float = 1.0,
+                  backend: str = "reference") -> List[TestEntry]:
+    """Battery job table. ``backend`` selects the kernel implementation
+    family-wide (stats/backends.py): "reference", "accelerated", or
+    "auto" (resolved here, so the table records a concrete backend)."""
+    backend = B.resolve(backend)
     if name == "smallcrush":
         combos = [(k, _scaled(kw, k, scale)) for k, kw in _BASE]
     elif name in ("crush", "bigcrush"):
@@ -168,7 +176,8 @@ def build_battery(name: str, scale: float = 1.0) -> List[TestEntry]:
         combos = combos[:target]
     else:
         raise KeyError(name)
-    return [_mk(i, k, scale, **kw) for i, (k, kw) in enumerate(combos)]
+    return [_mk(i, k, scale, backend=backend, **kw)
+            for i, (k, kw) in enumerate(combos)]
 
 
 def max_words(entries: List[TestEntry]) -> int:
@@ -197,13 +206,14 @@ def split_entry(entry: TestEntry, n_parts: int,
     sub_words = _WORDS[entry.kname](sub_kw)
     if sub_words >= entry.n_words:                  # floors won: no shrink
         return [dataclasses.replace(entry, index=start_index)]
-    fn = T.KERNELS[entry.kname]
+    fn = B.get_kernel(entry.kname, entry.backend or "reference")
     sub_cost = entry.cost * (sub_words / max(entry.n_words, 1))
     return [
         TestEntry(start_index + p,
                   f"{entry.name}[{p + 1}/{n_parts}]",
                   functools.partial(fn, **sub_kw), sub_words, sub_cost,
                   kname=entry.kname, params=tuple(sorted(sub_kw.items())),
-                  group=entry.group, part=p, n_parts=n_parts)
+                  group=entry.group, part=p, n_parts=n_parts,
+                  backend=entry.backend)
         for p in range(n_parts)
     ]

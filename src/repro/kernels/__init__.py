@@ -1,3 +1,20 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-layer plumbing: the ``interpret="auto"`` resolution every
+``ops.py`` wrapper uses, so importing a kernel on real TPU hardware never
+silently runs the Pallas interpreter (and CPU/CI keeps working without a
+Mosaic backend)."""
+from __future__ import annotations
+
+from typing import Union
+
+
+def resolve_interpret(interpret: Union[str, bool] = "auto") -> bool:
+    """Resolve a Pallas ``interpret`` knob: booleans pass through; "auto"
+    compiles the kernel when a TPU backend is present and interprets
+    everywhere else."""
+    if interpret == "auto":
+        import jax
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -1,12 +1,17 @@
-"""jit'd public wrapper: (B, S, H, dh) layout + GQA head grouping."""
+"""jit'd public wrapper: (B, S, H, dh) layout + GQA head grouping.
+
+``interpret="auto"`` (the default) compiles the Pallas kernel on real TPU
+hardware and falls back to the interpreter on CPU/GPU.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention
 
 
-def mha(q, k, v, *, scale, softcap=0.0, causal=True, interpret=True):
+def mha(q, k, v, *, scale, softcap=0.0, causal=True, interpret="auto"):
     """q: (B, S, H, dh); k/v: (B, T, K, dh) with H % K == 0 (GQA repeat)."""
     b, s, h, dh = q.shape
     kh = k.shape[2]
@@ -18,5 +23,5 @@ def mha(q, k, v, *, scale, softcap=0.0, causal=True, interpret=True):
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], dh)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], dh)
     o = flash_attention(qf, kf, vf, scale=scale, softcap=softcap,
-                        causal=causal, interpret=interpret)
+                        causal=causal, interpret=resolve_interpret(interpret))
     return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

@@ -33,7 +33,10 @@ def _rank_kernel(mats_ref, rank_ref):
         cand = col & ~used
         has = cand.any(axis=1)
         piv = jnp.argmax(cand, axis=1)                     # first candidate
-        pivrow = jnp.sum(jnp.where(ridx == piv[:, None], rows, 0), axis=1)
+        # dtype pinned: under an ambient-x64 trace (the battery runners)
+        # jnp.sum would promote uint32 -> uint64 and break the carry
+        pivrow = jnp.sum(jnp.where(ridx == piv[:, None], rows, 0), axis=1,
+                         dtype=jnp.uint32)
         pivrow = jnp.where(has, pivrow, 0)
         apply = col & (ridx != piv[:, None])
         rows = jnp.where(apply, rows ^ pivrow[:, None], rows)

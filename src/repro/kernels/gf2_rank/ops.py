@@ -1,16 +1,25 @@
-"""jit'd public wrapper: padding + dispatch to the Pallas kernel."""
+"""jit'd public wrapper: padding + dispatch to the Pallas kernel.
+
+``interpret="auto"`` (the default) compiles the Pallas kernel on real TPU
+hardware and falls back to the interpreter on CPU/GPU — callers never
+silently interpret on a TPU.
+"""
 from __future__ import annotations
+
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.gf2_rank.kernel import TILE_M, gf2_rank
 
 
-def rank32(mats: jax.Array, interpret: bool = True) -> jax.Array:
+def rank32(mats: jax.Array,
+           interpret: Union[str, bool] = "auto") -> jax.Array:
     """(M, 32) uint32 -> (M,) int32; pads M up to TILE_M internally."""
     m = mats.shape[0]
     pad = (-m) % TILE_M
     if pad:
         mats = jnp.pad(mats, ((0, pad), (0, 0)))
-    return gf2_rank(mats, interpret=interpret)[:m]
+    return gf2_rank(mats, interpret=resolve_interpret(interpret))[:m]

@@ -1,16 +1,26 @@
-"""jit'd public wrapper: padding (+ tail-bin masking) for histogram."""
+"""jit'd public wrapper: padding (+ tail-bin masking) for histogram.
+
+``interpret="auto"`` (the default) compiles the Pallas kernel on real TPU
+hardware and falls back to the interpreter on CPU/GPU — callers never
+silently interpret on a TPU.
+"""
 from __future__ import annotations
+
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.histogram.kernel import CHUNK, histogram
 
 
-def bincount(idx: jax.Array, k: int, interpret: bool = True) -> jax.Array:
+def bincount(idx: jax.Array, k: int,
+             interpret: Union[str, bool] = "auto") -> jax.Array:
     n = idx.shape[0]
     pad = (-n) % CHUNK
     if pad:
         idx = jnp.concatenate([idx, jnp.full((pad,), k, jnp.int32)])
-    out = histogram(idx, k + (1 if pad else 0), interpret=interpret)
+    out = histogram(idx, k + (1 if pad else 0),
+                    interpret=resolve_interpret(interpret))
     return out[:k]

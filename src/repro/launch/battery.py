@@ -17,6 +17,11 @@ sequential verdict engine (alpha from ``--alpha``) decides
 PASS/FAIL/UNDECIDED after every round, and pending rounds for a
 definitively-failed generator are cancelled instead of dispatched.
 
+``--backend {auto,reference,accelerated}`` picks the test-kernel
+implementation (stats/backends.py): ``accelerated`` routes the counting
+hot loops through the Pallas kernels, ``auto`` does so only on real TPU
+hardware. The choice (and its resolution) is recorded in ``--json``.
+
 ``--resize-at ROUND:WIDTH[,ROUND:WIDTH...]`` demonstrates elastic
 re-meshing (the paper's opportunistic pool — machines join and vacate
 mid-battery): after the given round the pool is resized to WIDTH and
@@ -51,6 +56,11 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.01,
                     help="family-wise error rate the sequential verdict "
                          "engine spends across the battery")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "accelerated"],
+                    help="test-kernel backend (stats/backends.py): "
+                         "reference = pure-jnp, accelerated = Pallas "
+                         "kernels, auto = accelerated on real TPU only")
     ap.add_argument("--retries", type=int, default=2)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resize-at", dest="resize_at", default=None,
@@ -89,6 +99,8 @@ def main():
     from repro.core.policies import RetryPolicy       # noqa: E402
     from repro.launch.mesh import make_pool_mesh      # noqa: E402
 
+    from repro.stats import backends as kernel_backends  # noqa: E402
+
     gens = tuple(g.strip() for g in args.gen.split(",") if g.strip())
     session = PoolSession(mesh=make_pool_mesh(args.workers or None))
     launch_workers = session.n_workers          # width before any resize
@@ -96,9 +108,13 @@ def main():
                    scale=args.scale, policy=args.policy,
                    retry=RetryPolicy(max_retries=args.retries),
                    checkpoint_path=args.ckpt, progress=True,
-                   alpha=args.alpha, stop_on_verdict=args.adaptive)
+                   alpha=args.alpha, stop_on_verdict=args.adaptive,
+                   backend=args.backend)
+    backend_resolved = kernel_backends.resolve(args.backend)
     print(f"pool: {session.n_workers} workers | battery={args.battery} "
-          f"gen={','.join(gens)} scale={args.scale} policy={args.policy}"
+          f"gen={','.join(gens)} scale={args.scale} policy={args.policy} "
+          f"backend={args.backend}"
+          + (f"->{backend_resolved}" if args.backend == "auto" else "")
           + (f" adaptive(alpha={args.alpha})" if args.adaptive else ""))
 
     handle = session.submit(spec)
@@ -128,6 +144,8 @@ def main():
         payload = {
             "battery": args.battery, "scale": args.scale,
             "workers": launch_workers, "policy": args.policy,
+            "backend": args.backend,
+            "backend_resolved": backend_resolved,
             "adaptive": args.adaptive, "alpha": args.alpha,
             "resizes": resizes,
             "seed": args.seed, "wall_s": round(res.wall_s, 3),

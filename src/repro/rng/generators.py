@@ -8,10 +8,16 @@ worker/round executes them, which is what makes the pool's hold/release and
 speculative re-execution free to reconcile.
 
 Counter-based generators (splitmix64, threefry, pcg32/lcg64 via LCG
-jump-ahead, middle-square-weyl) evaluate lanes fully in parallel; classic
-sequential recurrences (xorshift64*, MWC, RANDU, MINSTD) run as ``lax.scan``.
-RANDU is deliberately included as a known-bad generator the battery must
-flag.
+jump-ahead, middle-square-weyl) evaluate lanes fully in parallel. The
+classic recurrences xorshift64*, RANDU and MINSTD are ALSO evaluated in
+parallel via jump-ahead cycle splitting: their step maps are linear
+(an affine map mod 2^64 / a multiplicative map mod 2^31 or 2^31-1 / a
+GF(2)-linear map on 64 bits), so lane i computes step^i(s0) directly
+with a square-and-multiply ladder of log-depth — bit-exact with the
+sequential recurrence (the ``*_block_scan`` twins kept for tests and
+benchmarks). Only MWC still runs as ``lax.scan``: its lag-1 carry chain
+has no cheap jump. RANDU is deliberately included as a known-bad
+generator the battery must flag.
 
 64-bit integer ops require tracing under x64 (``with x64():`` —
 ``jax.experimental.enable_x64``); constants here are Python ints so nothing
@@ -25,6 +31,7 @@ from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 GOLDEN = 0x9E3779B97F4A7C15
 MASK32 = 0xFFFFFFFF
@@ -123,6 +130,135 @@ def lcg64_block(seed, stream, n, offset=0):
 
 
 # ---------------------------------------------------------------------------
+# jump-ahead cycle splitting (log-depth twins of the classic recurrences)
+
+def _jump_bits(n, offset):
+    """Ladder length: enough exponent bits to cover every lane index
+    ``1..n+offset``. Static when offset is a Python int (the battery hot
+    path); a traced offset falls back to the full 64-bit ladder."""
+    if isinstance(offset, (int, np.integer)):
+        return max(int(int(n) + int(offset)).bit_length(), 1)
+    return 64
+
+
+def _pow_jump(idx, mult, nbits, mulmod):
+    """``mult^idx`` per lane by square-and-multiply — the ``_lcg_jump``
+    ladder generalized to any associative product ``mulmod``."""
+    acc = jnp.ones_like(idx)
+    apow = jnp.broadcast_to(_u64(mult), idx.shape)
+    for bit in range(nbits):
+        take = ((idx >> bit) & 1) == 1
+        acc = jnp.where(take, mulmod(acc, apow), acc)
+        apow = mulmod(apow, apow)
+    return acc
+
+
+@functools.lru_cache(maxsize=1)
+def _xs_jump_cols():
+    """Columns of M^(2^k), k = 0..63, for the xorshift64 step matrix M
+    (the 12/25/27 shift-XOR map is linear over GF(2)^64). Host-side
+    precompute: column b of M is step(e_b); squaring applies the current
+    power to each of its own columns (matvec = XOR of selected columns)."""
+    mask = (1 << 64) - 1
+    cols = []
+    for b in range(64):
+        s = 1 << b
+        s ^= s >> 12
+        s ^= (s << 25) & mask
+        s ^= s >> 27
+        cols.append(s)
+    cols = np.array(cols, np.uint64)
+    powers = np.empty((64, 64), np.uint64)
+    for k in range(64):
+        powers[k] = cols
+        nxt = np.zeros(64, np.uint64)
+        for j in range(64):
+            bit = ((cols >> np.uint64(j)) & np.uint64(1)).astype(bool)
+            nxt = np.where(bit, nxt ^ cols[j], nxt)
+        cols = nxt
+    return powers
+
+
+def _xs_jump(s0, idx, nbits):
+    """``M^idx s0`` per lane: GF(2) square-and-multiply over the
+    precomputed matrix powers, O(64 log idx) depth instead of an O(idx)
+    scan. The matvec is an XOR-reduce of the state-selected columns
+    (one (lanes, 64) reduce per ladder step keeps the trace small; XOR
+    is exact, so bit-exactness vs the scan twin is preserved)."""
+    pows = _xs_jump_cols()
+    s = jnp.broadcast_to(s0, idx.shape)
+    bitpos = jnp.arange(64, dtype=jnp.uint64)
+    for k in range(nbits):
+        take = ((idx >> k) & 1) == 1
+        cols = jnp.asarray(pows[k])
+        sel = jnp.where(((s[:, None] >> bitpos[None, :]) & 1) == 1,
+                        cols[None, :], _u64(0))
+        y = jax.lax.reduce(sel, _u64(0), jax.lax.bitwise_xor, (1,))
+        s = jnp.where(take, y, s)
+    return s
+
+
+# xorshift cycle-split chunk: each lane jump-starts its segment with the
+# GF(2) ladder, then steps XS_CHUNK times — the ladder (the expensive 64-
+# column matvec) runs once per CHUNK outputs instead of once per output,
+# and the residual sequential depth is a constant 64, not O(n)
+XS_CHUNK = 64
+
+
+def xorshift64s_block(seed, stream, n, offset=0):
+    """xorshift64* via jump-ahead cycle splitting: lane l jumps directly
+    to state M^(l*CHUNK+offset) s0 (log-depth GF(2) ladder), then a
+    vmapped constant-length micro-scan emits its segment. Bit-exact with
+    the sequential recurrence (``xorshift64s_block_scan``)."""
+    s0 = _mix_seed(seed, stream) | _u64(1)
+    lanes = -(-n // XS_CHUNK)
+    starts = (jnp.arange(lanes, dtype=jnp.uint64) * XS_CHUNK
+              + _u64(offset))
+    lane0 = _xs_jump(s0, starts, _jump_bits(n, offset))
+
+    def step(s, _):
+        s = s ^ (s >> 12)
+        s = s ^ (s << 25)
+        s = s ^ (s >> 27)
+        return s, s
+
+    def segment(st):
+        _, outs = jax.lax.scan(step, st, None, length=XS_CHUNK)
+        return outs
+
+    states = jax.vmap(segment)(lane0).reshape(-1)[:n]
+    return _hi32(states * _u64(0x2545F4914F6CDD1D))
+
+
+def randu_block(seed, stream, n, offset=0):
+    """RANDU: x <- 65539 x mod 2^31, via multiplicative jump-ahead
+    (x_i = 65539^i x_0 — the modulus is a power of two, so the ring
+    product is a masked multiply). Famously defective — the battery's
+    canary (must FAIL spectral-sensitive tests)."""
+    s0 = (_mix_seed(seed, stream) & _u64(0x7FFFFFFF)) | _u64(1)
+    idx = jnp.arange(1, n + 1, dtype=jnp.uint64) + _u64(offset)
+
+    def mm(a, b):
+        return (a * b) & _u64(0x7FFFFFFF)
+    st = mm(jnp.broadcast_to(s0, idx.shape),
+            _pow_jump(idx, 65539, _jump_bits(n, offset), mm))
+    return (st << 1).astype(jnp.uint32)
+
+
+def minstd_block(seed, stream, n, offset=0):
+    """MINSTD: x <- 16807 x mod (2^31 - 1), via multiplicative jump-ahead
+    (prime modulus; 62-bit products fit uint64)."""
+    s0 = (_mix_seed(seed, stream) % _u64(2147483646)) + _u64(1)
+    idx = jnp.arange(1, n + 1, dtype=jnp.uint64) + _u64(offset)
+
+    def mm(a, b):
+        return (a * b) % _u64(2147483647)
+    st = mm(jnp.broadcast_to(s0, idx.shape),
+            _pow_jump(idx, 16807, _jump_bits(n, offset), mm))
+    return (st << 1).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
 # sequential recurrences
 
 def _scan_block(step, state0, n):
@@ -132,7 +268,9 @@ def _scan_block(step, state0, n):
     return outs
 
 
-def xorshift64s_block(seed, stream, n):
+def xorshift64s_block_scan(seed, stream, n):
+    """The O(n)-sequential twin of ``xorshift64s_block`` (tests assert the
+    jump path is bit-exact against this)."""
     def step(s):
         s = s ^ (s >> 12)
         s = s ^ (s << 25)
@@ -142,7 +280,11 @@ def xorshift64s_block(seed, stream, n):
 
 
 def mwc_block(seed, stream, n):
-    """Multiply-with-carry (Marsaglia), 32-bit lag-1."""
+    """Multiply-with-carry (Marsaglia), 32-bit lag-1. The ONLY generator
+    still evaluated as a sequential ``lax.scan`` — the carry chain is not
+    linear in any cheap ring, so there is no O(1) jump-ahead; it is the
+    lone member of ``COUNTER_BASED``'s complement and does not accept an
+    ``offset``."""
     s = _mix_seed(seed, stream)
     x0 = (s >> 32) | _u64(1)
     c0 = (s & _u64(MASK32)) | _u64(1)
@@ -154,9 +296,8 @@ def mwc_block(seed, stream, n):
     return _scan_block(step, (x0, c0), n)
 
 
-def randu_block(seed, stream, n):
-    """RANDU: x <- 65539 x mod 2^31. Famously defective — the battery's
-    canary (must FAIL spectral-sensitive tests)."""
+def randu_block_scan(seed, stream, n):
+    """Sequential twin of ``randu_block`` (bit-exactness reference)."""
     s0 = (_mix_seed(seed, stream) & _u64(0x7FFFFFFF)) | _u64(1)
 
     def step(s):
@@ -165,13 +306,22 @@ def randu_block(seed, stream, n):
     return _scan_block(step, s0, n)
 
 
-def minstd_block(seed, stream, n):
-    """MINSTD: x <- 16807 x mod (2^31 - 1)."""
+def minstd_block_scan(seed, stream, n):
+    """Sequential twin of ``minstd_block`` (bit-exactness reference)."""
     def step(s):
         s = (s * _u64(16807)) % _u64(2147483647)
         return s, (s << 1).astype(jnp.uint32)
     s0 = (_mix_seed(seed, stream) % _u64(2147483646)) + _u64(1)
     return _scan_block(step, s0, n)
+
+
+# sequential references for the jump-ahead generators, keyed by name —
+# what tests/test_backends.py asserts bit-exactness against
+SCAN_REFERENCE: Dict[str, Callable] = {
+    "xorshift64s": xorshift64s_block_scan,
+    "randu": randu_block_scan,
+    "minstd": minstd_block_scan,
+}
 
 
 GENERATORS: Dict[str, Callable] = {
@@ -190,9 +340,12 @@ GEN_IDS = {name: i for i, name in enumerate(GENERATORS)}
 # Counter-based generators: block(seed, stream, n, offset) supports exact
 # continuation — block(n=2k) == block(n=k) ++ block(n=k, offset=k) — the
 # property that makes sequential-reuse mode and over-decomposition exact.
-# The scan-based recurrences (xorshift64s, mwc, randu, minstd) are absent
-# by construction: they have no O(1) jump-ahead.
-COUNTER_BASED = ("splitmix64", "msweyl", "threefry", "pcg32", "lcg64")
+# xorshift64s/randu/minstd joined via jump-ahead cycle splitting (their
+# linear step maps admit a log-depth ladder). The complement is exactly
+# {mwc}: the lag-1 multiply-with-carry chain has no cheap jump, stays a
+# sequential lax.scan, and takes no offset.
+COUNTER_BASED = ("splitmix64", "msweyl", "threefry", "pcg32", "lcg64",
+                 "xorshift64s", "randu", "minstd")
 
 
 def gen_block_by_id(gen_id, seed, stream, n):

@@ -1,0 +1,209 @@
+"""Kernel backend registry: every statistical test family behind one
+``bits -> (stat, p)`` signature, with a ``reference`` (pure-jnp,
+``stats/tests.py``) and — where a hand-written Pallas kernel covers the
+hot loop — an ``accelerated`` implementation (DESIGN.md §7).
+
+The accelerated paths route the counting hot loops through the fused
+Pallas kernels that previously sat unused:
+
+  gap / poker / weight / serial2d / collision
+      -> ``kernels/histogram`` (scatter-free fused bin-count; collision
+         only below ``HIST_MAX_BINS`` urns — paper-sized collision
+         entries keep the sort-based path, see ``collision_accel``)
+  rank
+      -> ``kernels/gf2_rank``  (bit-packed GF(2) elimination)
+
+Families whose hot loop has no Pallas kernel (birthday, coupon, maxoft,
+hamcorr) fall back to the reference implementation under the
+``accelerated`` backend, so a battery-wide backend choice always
+resolves. Both implementations of a family share the same probability
+model and p-value machinery — parity to float32 tolerance is asserted in
+``tests/test_backends.py`` for every registered family.
+
+Backend names:
+
+  ``reference``    today's pure-jnp kernels — the oracle
+  ``accelerated``  Pallas kernels (``interpret="auto"``: compiled on real
+                   TPU, interpreted on CPU so CI exercises the same code)
+  ``auto``         resolves to ``accelerated`` on a TPU backend and
+                   ``reference`` everywhere else
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gf2_rank.ops import rank32
+from repro.kernels.histogram.ops import bincount
+from repro.rng.generators import to_unit
+from repro.stats import tests as T
+from repro.stats.special import (chi2_from_counts, chi2_sf,
+                                 poisson_midp_upper)
+
+BACKENDS = ("auto", "reference", "accelerated")
+
+# Densest urn space the fused bin-count will materialize: the histogram
+# kernel compares a (CHUNK, K) tile per grid step, so K is VMEM-bounded.
+# Collision jobs with more urns than this keep the sort-based reference
+# path even under the accelerated backend (static Python branch — kbits
+# is a battery parameter, not a traced value).
+HIST_MAX_BINS = 1 << 16
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register(kname: str, backend: str, fn: Callable) -> None:
+    """Register ``fn`` as the ``backend`` implementation of test family
+    ``kname``. Signature contract: ``fn(bits, **params) -> (stat, p)``."""
+    if backend not in ("reference", "accelerated"):
+        raise KeyError(f"backend must be reference|accelerated, "
+                       f"got {backend!r}")
+    _REGISTRY.setdefault(kname, {})[backend] = fn
+
+
+def families() -> list:
+    return sorted(_REGISTRY)
+
+
+def accelerated_families() -> list:
+    """Families with a real accelerated implementation (no fallback)."""
+    return sorted(k for k, d in _REGISTRY.items() if "accelerated" in d)
+
+
+def default_backend() -> str:
+    """What ``auto`` means here: accelerated on real TPU hardware,
+    reference under interpret/CPU (the Pallas interpreter would only
+    slow a CPU battery down; parity tests opt in explicitly)."""
+    return "accelerated" if jax.default_backend() == "tpu" else "reference"
+
+
+def resolve(backend: str) -> str:
+    """Map a user-facing backend name to a concrete one."""
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown backend {backend!r}; known: {BACKENDS}")
+    return default_backend() if backend == "auto" else backend
+
+
+def get_kernel(kname: str, backend: str = "reference") -> Callable:
+    """The family's implementation under ``backend`` (resolved). A family
+    without an accelerated implementation falls back to its reference —
+    a battery-wide backend choice must always produce a full job table."""
+    impls = _REGISTRY[kname]
+    b = resolve(backend)
+    if b not in impls:
+        b = "reference"
+    return impls[b]
+
+
+# ---------------------------------------------------------------------------
+# accelerated implementations (counting hot loops on the Pallas kernels;
+# probability models shared with the reference in stats/tests.py)
+
+
+def gap_accel(bits, n=65536, beta=0.125, maxlen=20):
+    """`gap` with the gap-length histogram on the fused bin-count."""
+    u = to_unit(bits[:n])
+    hit = u < beta
+    idx = jnp.arange(n)
+    last = jax.lax.cummax(jnp.where(hit, idx, -1))
+    prev = jnp.concatenate([jnp.array([-1]), last[:-1]])
+    gaps = jnp.where(hit, idx - prev - 1, -1)
+    gapc = jnp.clip(gaps, -1, maxlen)
+    bins = jnp.where(hit, gapc, maxlen + 1).astype(jnp.int32)
+    counts = bincount(bins, maxlen + 2)[:maxlen + 1]
+    n_hits = jnp.sum(counts)
+    probs = np.array([beta * (1 - beta) ** i for i in range(maxlen)]
+                     + [(1 - beta) ** maxlen], np.float32)
+    stat = chi2_from_counts(counts, n_hits * probs)
+    return stat, chi2_sf(stat, maxlen)
+
+
+def poker_accel(bits, n=32768, d=8, hand=5):
+    """`poker` with the distinct-count histogram on the fused bin-count."""
+    digits = (bits[:n * hand] >> 29).astype(jnp.int32).reshape(n, hand)
+    s = jnp.sort(digits, axis=1)
+    distinct = 1 + jnp.sum(jnp.diff(s, axis=1) != 0, axis=1)
+    distinct = jnp.maximum(distinct, 2)
+    counts = bincount((distinct - 2).astype(jnp.int32), hand - 1)
+    probs = T._stirling_probs(d, hand)
+    probs = np.concatenate([[probs[0] + probs[1]], probs[2:]])
+    stat = chi2_from_counts(counts, n * probs)
+    return stat, chi2_sf(stat, hand - 2)
+
+
+def weight_accel(bits, n=65536):
+    """`weight` with the Hamming-weight histogram on the fused bin-count."""
+    w = jax.lax.population_count(bits[:n]).astype(jnp.int32)
+    lo, hi = 10, 22
+    b = (jnp.clip(w, lo, hi) - lo).astype(jnp.int32)
+    counts = bincount(b, hi - lo + 1)
+    probs = []
+    for k in range(lo, hi + 1):
+        if k == lo:
+            probs.append(sum(math.comb(32, j)
+                             for j in range(0, lo + 1)) / 2 ** 32)
+        elif k == hi:
+            probs.append(sum(math.comb(32, j)
+                             for j in range(hi, 33)) / 2 ** 32)
+        else:
+            probs.append(math.comb(32, k) / 2 ** 32)
+    probs = np.array(probs, np.float32)
+    stat = chi2_from_counts(counts, n * probs)
+    return stat, chi2_sf(stat, hi - lo)
+
+
+def serial2d_accel(bits, n=65536, d=64):
+    """`serial2d` with the cell histogram on the fused bin-count."""
+    dbits = int(d).bit_length() - 1
+    assert (1 << dbits) == d, "d must be a power of two"
+    u = bits[:2 * n]
+    x = (u[0::2] >> (32 - dbits)).astype(jnp.int32)
+    y = (u[1::2] >> (32 - dbits)).astype(jnp.int32)
+    cell = (x * d + y).astype(jnp.int32)
+    counts = bincount(cell, d * d)
+    stat = chi2_from_counts(counts, jnp.full((d * d,), n / (d * d)))
+    return stat, chi2_sf(stat, d * d - 1)
+
+
+def collision_accel(bits, n=65536, kbits=24):
+    """`collision` with urn occupancy on the fused bin-count: distinct
+    urns = occupied bins, so the collision count needs no sort. Falls
+    back to the sort-based reference when the urn space exceeds
+    ``HIST_MAX_BINS`` (dense occupancy would not fit VMEM)."""
+    k = 1 << kbits
+    if k > HIST_MAX_BINS:
+        return T.collision(bits, n=n, kbits=kbits)
+    urns = (bits[:n] >> (32 - kbits)).astype(jnp.int32)
+    occ = bincount(urns, k)
+    distinct = jnp.sum(occ > 0).astype(jnp.float32)
+    coll = n - distinct
+    kf = float(k)
+    mean = n - kf + kf * (1.0 - 1.0 / kf) ** n
+    return coll, poisson_midp_upper(coll, max(mean, 1e-9))
+
+
+def rank_accel(bits, n_mats=1024):
+    """`rank` on the bit-packed Pallas GF(2) elimination kernel, with the
+    4-bin rank histogram on the fused bin-count."""
+    mats = bits[:n_mats * 32].reshape(n_mats, 32)
+    r = rank32(mats)
+    b = jnp.clip(r - 29, 0, 3).astype(jnp.int32)
+    counts = bincount(b, 4)
+    stat = chi2_from_counts(counts, n_mats * T._rank_probs(32))
+    return stat, chi2_sf(stat, 3)
+
+
+# ---------------------------------------------------------------------------
+# registration: every family gets a reference; six get accelerated paths
+
+for _k, _fn in T.KERNELS.items():
+    register(_k, "reference", _fn)
+
+for _k, _fn in {"gap": gap_accel, "poker": poker_accel,
+                "weight": weight_accel, "serial2d": serial2d_accel,
+                "collision": collision_accel, "rank": rank_accel}.items():
+    register(_k, "accelerated", _fn)

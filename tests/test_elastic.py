@@ -75,11 +75,11 @@ def test_grow_shrink_sugar():
 # ----------------------------------------------------- idle-slot gating
 
 def test_idle_slot_generation_is_gated():
-    """Padded rounds must not pay generator cost for empty slots: the bit
-    block is produced under a lax.cond, and the idle branch stays
-    (0, nan) while real jobs are untouched."""
+    """Padded rounds must not pay generator cost for empty slots: the
+    idle branch is a zero-length sentinel (the lax.cond returns (0, nan)
+    before any bit block exists), and real jobs are untouched."""
     entries = build_battery("smallcrush", 0.0625)
-    job = _job_fn(entries, max_words(entries))
+    job = _job_fn(entries)
     with jax.experimental.enable_x64():
         jaxpr = str(jax.make_jaxpr(job)(
             np.int32(-1), np.int32(0), np.int32(0)))
