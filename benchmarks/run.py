@@ -8,11 +8,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (accuracy, batch_model, battery_times,
-                            early_stop, elastic, hotpath, kernel_bench,
-                            lm_step, submit_overhead)
+                            campaign, early_stop, elastic, hotpath,
+                            kernel_bench, lm_step, submit_overhead)
     rows = []
     for mod in (batch_model, submit_overhead, accuracy, kernel_bench,
-                hotpath, battery_times, early_stop, elastic, lm_step):
+                hotpath, battery_times, early_stop, elastic, campaign,
+                lm_step):
         try:
             mod.run(rows)
         except Exception:                       # noqa: BLE001

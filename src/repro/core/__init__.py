@@ -1,14 +1,24 @@
+"""The paper's orchestration system: session API, campaign screening,
+schedule policies, stitching — see the per-module docstrings."""
 # The paper's primary contribution — the orchestration SYSTEM.
 # Public surface: RunSpec / PoolSession / BatteryRun (repro.core.api),
-# schedule + retry policies (repro.core.policies). The classic
-# run_battery shim lives in repro.core.queue.
+# campaign screening (repro.core.campaign), schedule + retry policies
+# (repro.core.policies). The classic run_battery shim lives in
+# repro.core.queue.
 from repro.core.api import (  # noqa: F401
     BatteryResult,
     BatteryRun,
+    CampaignLedger,
+    CampaignSpec,
     Checkpoint,
     PoolSession,
     RunResult,
     RunSpec,
+)
+from repro.core.campaign import (  # noqa: F401
+    Campaign,
+    CampaignResult,
+    screen,
 )
 from repro.core.policies import (  # noqa: F401
     POLICIES,

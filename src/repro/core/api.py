@@ -60,15 +60,20 @@ from repro.ckpt import io as ckpt_io
 from repro.core import stitch
 from repro.core.battery import TestEntry, build_battery
 from repro.core.policies import RetryPolicy, SchedulePolicy, get_policy
-from repro.core.pool import make_fanout_runner, make_round_runner
+from repro.core.pool import (make_fanout_runner, make_grid_runner,
+                             make_round_runner)
 from repro.core.scheduler import make_plan, replan
-from repro.rng.generators import GEN_IDS
+from repro.rng.generators import COUNTER_BASED, GEN_IDS
 from repro.stats import backends as kernel_backends
 
 # Battery presets (the folded BatteryConfig from common/config.py):
 # test count and the sample-size multiplier of the paper-sized run.
-BATTERY_SIZES = {"smallcrush": 10, "crush": 96, "bigcrush": 106}
-DEFAULT_SCALES = {"smallcrush": 1.0, "crush": 4.0, "bigcrush": 16.0}
+# "pairstream" is the stream-seam machinery check the campaign subsystem
+# runs as its screening phase (DESIGN.md §8), not a TestU01 analogue.
+BATTERY_SIZES = {"smallcrush": 10, "crush": 96, "bigcrush": 106,
+                 "pairstream": 4}
+DEFAULT_SCALES = {"smallcrush": 1.0, "crush": 4.0, "bigcrush": 16.0,
+                  "pairstream": 1.0}
 
 
 # ---------------------------------------------------------------------------
@@ -91,7 +96,16 @@ class RunSpec:
     (stats/backends.py): "reference" (pure-jnp), "accelerated" (Pallas
     kernels) or "auto" (accelerated on real TPU hardware, reference under
     interpret/CPU). Both backends share one ``bits -> (stat, p)``
-    contract and stitch identical verdicts (tests/test_backends.py)."""
+    contract and stitch identical verdicts (tests/test_backends.py).
+
+    ``offsets`` (campaign grids, DESIGN.md §8) gives each generator
+    position a word offset into its (seed, stream) sequences: position g
+    reads words ``[offsets[g], offsets[g] + n)`` instead of ``[0, n)``.
+    ``None`` (the default) is the classic path with untouched trace
+    shapes; any tuple — even all zeros — routes dispatch through the
+    offset-taking grid runner, whose executables are shared across every
+    offset value. Non-zero offsets require counter-based (offset-
+    continuable) generators; ``mwc`` has no jump-ahead and is refused."""
     battery: str
     generators: Union[str, Tuple[str, ...]] = ("splitmix64",)
     seeds: Union[int, Tuple[int, ...]] = (0,)
@@ -103,6 +117,7 @@ class RunSpec:
     alpha: float = 0.01
     stop_on_verdict: bool = False
     backend: str = "auto"
+    offsets: Optional[Union[int, Tuple[int, ...]]] = None
 
     def __post_init__(self):
         if self.battery not in BATTERY_SIZES:
@@ -124,6 +139,24 @@ class RunSpec:
                 "(give one seed, or one per generator)")
         object.__setattr__(self, "generators", gens)
         object.__setattr__(self, "seeds", seeds)
+        if self.offsets is not None:
+            offs = ((int(self.offsets),) if isinstance(self.offsets, int)
+                    else tuple(int(o) for o in self.offsets))
+            if len(offs) == 1:
+                offs = offs * len(gens)
+            if len(offs) != len(gens):
+                raise ValueError(
+                    f"{len(offs)} offsets for {len(gens)} generators "
+                    "(give one offset, or one per generator)")
+            for g, o in zip(gens, offs):
+                if o < 0:
+                    raise ValueError(f"offsets must be >= 0, got {o}")
+                if o and g not in COUNTER_BASED:
+                    raise ValueError(
+                        f"generator {g!r} is not offset-continuable "
+                        f"(COUNTER_BASED); it cannot take a non-zero "
+                        f"stream offset")
+            object.__setattr__(self, "offsets", offs)
         get_policy(self.policy)                  # validate early
         if not (0.0 < self.alpha < 1.0):
             raise ValueError(f"alpha must be in (0, 1), got {self.alpha}")
@@ -139,10 +172,12 @@ class RunSpec:
 
     @property
     def n_tests(self) -> int:
+        """Battery size in TEST space (pre-decomposition)."""
         return BATTERY_SIZES[self.battery]
 
     @property
     def n_generators(self) -> int:
+        """Width of the fan-out axis (generator positions)."""
         return len(self.generators)
 
 
@@ -163,6 +198,7 @@ class RunResult:
 
     @property
     def n_suspect(self) -> int:
+        """Tests flagged by the two-sided suspect rule."""
         return self.report.count("SUSPECT")
 
 
@@ -177,10 +213,12 @@ class BatteryResult:
 
     @property
     def n_suspect(self) -> int:
+        """Suspect count across every generator's run."""
         return sum(r.n_suspect for r in self.runs.values())
 
     @property
     def verdicts(self) -> Dict[str, stitch.Verdict]:
+        """Per-generator sequential verdicts, keyed by name."""
         return {g: r.verdict for g, r in self.runs.items()}
 
 
@@ -221,10 +259,12 @@ class Checkpoint:
 
     @property
     def n_generators(self) -> int:
+        """Rows of the stacked (G, K) result arrays."""
         return int(self.stats.shape[0])
 
     @classmethod
     def load(cls, path: str) -> "Checkpoint":
+        """Read any supported layout (v1/v2/v3) into the v3 shape."""
         leaves = ckpt_io.load_flat(path)
         if len(leaves) == 7:                    # v3
             ver, idx, st, pv, dec, rounds, alpha = leaves
@@ -281,6 +321,203 @@ class Checkpoint:
 
 
 # ---------------------------------------------------------------------------
+# campaign spec + ledger (generator-fleet screening, DESIGN.md §8)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """Declarative screening grid: ``generators`` x ``n_streams``
+    sub-stream offsets, screened in ``waves`` (battery scales, run
+    cheapest first) with failed cells knocked out of subsequent waves.
+
+    ``waves`` are battery scales; the campaign driver sorts them
+    ascending so the cheap screening waves run before the expensive
+    confirmation waves (``scheduler.wave_schedule``). ``stream_check``
+    prepends the pairstream seam battery as phase 0 — the inter-stream
+    disjointness/correlation check over adjacent sub-streams.
+
+    ``span`` is the word spacing between adjacent sub-streams (stream s
+    of a cell reads words ``[s * span, ...)`` of every job's sequence);
+    ``None`` derives the smallest power-of-two span that keeps every
+    job's block of the largest wave inside its own stream. More than one
+    stream requires every generator to be offset-continuable
+    (``COUNTER_BASED`` — mwc is refused up front, not at dispatch)."""
+    battery: str
+    generators: Tuple[str, ...]
+    n_streams: int = 1
+    seed: int = 0
+    waves: Tuple[float, ...] = (0.25, 1.0)
+    alpha: float = 0.01
+    policy: Union[str, SchedulePolicy] = "lpt"
+    retry: RetryPolicy = RetryPolicy()
+    backend: str = "auto"
+    stream_check: bool = True
+    span: Optional[int] = None
+    ledger_path: Optional[str] = None
+    progress: bool = False
+
+    def __post_init__(self):
+        if self.battery not in BATTERY_SIZES:
+            raise KeyError(f"unknown battery {self.battery!r}; "
+                           f"known: {sorted(BATTERY_SIZES)}")
+        gens = ((self.generators,) if isinstance(self.generators, str)
+                else tuple(self.generators))
+        if not gens:
+            raise ValueError("a campaign needs at least one generator")
+        if len(set(gens)) != len(gens):
+            raise ValueError(f"duplicate generators in {gens}")
+        for g in gens:
+            if g not in GEN_IDS:
+                raise KeyError(f"unknown generator {g!r}; "
+                               f"known: {sorted(GEN_IDS)}")
+        object.__setattr__(self, "generators", gens)
+        if self.n_streams < 1:
+            raise ValueError(f"n_streams must be >= 1, got {self.n_streams}")
+        if self.n_streams > 1:
+            bad = [g for g in gens if g not in COUNTER_BASED]
+            if bad:
+                raise ValueError(
+                    f"stream grids need offset-continuable generators; "
+                    f"{bad} are not COUNTER_BASED")
+        waves = ((self.waves,) if isinstance(self.waves, (int, float))
+                 else tuple(float(w) for w in self.waves))
+        if not waves or any(w <= 0 for w in waves):
+            raise ValueError(f"waves must be positive scales, got {waves}")
+        object.__setattr__(self, "waves", waves)
+        if not (0.0 < self.alpha < 1.0):
+            raise ValueError(f"alpha must be in (0, 1), got {self.alpha}")
+        get_policy(self.policy)
+        if self.backend not in kernel_backends.BACKENDS:
+            raise KeyError(f"unknown backend {self.backend!r}; "
+                           f"known: {kernel_backends.BACKENDS}")
+        if self.span is not None and self.span < 1:
+            raise ValueError(f"span must be >= 1, got {self.span}")
+
+    @property
+    def cells(self) -> List[Tuple[str, int]]:
+        """Grid cells in ledger order: (generator, stream) pairs."""
+        return [(g, s) for g in self.generators
+                for s in range(self.n_streams)]
+
+    @property
+    def n_cells(self) -> int:
+        """Grid size: generators x streams."""
+        return len(self.generators) * self.n_streams
+
+    def digest(self) -> int:
+        """Deterministic uint64 identity of everything the campaign's
+        DECISIONS depend on — battery, grid, seed, waves, alpha, policy,
+        stream_check, span. Stored in the ledger so a resume against a
+        reconfigured campaign is refused instead of silently replaying
+        decisions made under different settings. ``backend`` is
+        deliberately excluded: both backends are parity-asserted to
+        stitch identical verdicts (tests/test_backends.py), so a ledger
+        may move between reference and accelerated hosts."""
+        import hashlib
+        policy = get_policy(self.policy)
+        key = repr((self.battery, self.generators, self.n_streams,
+                    self.seed, self.waves, self.alpha, policy.name,
+                    policy.signature(), self.stream_check, self.span))
+        return int.from_bytes(
+            hashlib.sha256(key.encode()).digest()[:8], "big")
+
+
+CAMPAIGN_LEDGER_VERSION = 1
+
+# cell decision codes shared by the ledger and the campaign driver
+# (0/1/2 match BatteryRun._DECISION_CODE; the phase axis is the ledger's)
+CELL_UNDECIDED, CELL_PASS, CELL_FAIL = 0, 1, 2
+
+
+@dataclasses.dataclass
+class CampaignLedger:
+    """On-disk campaign progress — keyed by CELL identity
+    ``(gen_id, stream)``, never by wave order or grid position, the same
+    discipline as the v3 run checkpoint (job-id keyed, §6): the layout
+    is a pure function of the grid, so a ledger survives re-ordering of
+    waves and resumes on any pool width.
+
+    Wire layout (``ckpt/io`` leaves)::
+
+      [version, gen_ids (C,) int32, streams (C,) int32,
+       decisions (C,) int8, decided_phase (C,) int8 (-1 = undecided),
+       phases_done, alpha, spec_digest uint64]
+
+    ``decisions`` carries ``CELL_UNDECIDED/CELL_PASS/CELL_FAIL``;
+    ``decided_phase`` records WHICH phase decided the cell (0 = stream
+    check when enabled, then the waves in ascending-scale order).
+    ``phases_done`` counts completed phases, so a resumed campaign
+    re-enters the phase list exactly where it stopped; a phase
+    interrupted mid-battery additionally resumes from its own per-phase
+    run checkpoint (``<ledger>.phaseK``). ``spec_digest`` pins the full
+    decision-relevant configuration (``CampaignSpec.digest``) — resuming
+    with a different battery, waves, seed, alpha, policy, stream_check
+    or span is refused, not silently replayed."""
+    gen_ids: np.ndarray
+    streams: np.ndarray
+    decisions: np.ndarray
+    decided_phase: np.ndarray
+    phases_done: int = 0
+    alpha: Optional[float] = None
+    spec_digest: int = 0
+    version: int = CAMPAIGN_LEDGER_VERSION
+
+    @classmethod
+    def fresh(cls, spec: CampaignSpec) -> "CampaignLedger":
+        """An all-undecided ledger for the spec's grid."""
+        c = spec.n_cells
+        return cls(
+            np.asarray([GEN_IDS[g] for g, _ in spec.cells], np.int32),
+            np.asarray([s for _, s in spec.cells], np.int32),
+            np.zeros((c,), np.int8), np.full((c,), -1, np.int8),
+            0, spec.alpha, spec.digest())
+
+    @classmethod
+    def load(cls, path: str) -> "CampaignLedger":
+        """Read (and version-check) a ledger file."""
+        leaves = ckpt_io.load_flat(path)
+        if len(leaves) != 8:
+            raise ValueError(f"campaign ledger {path} has {len(leaves)} "
+                             "leaves; expected 8")
+        ver, gids, streams, dec, phase, done, alpha, digest = leaves
+        if int(ver) != CAMPAIGN_LEDGER_VERSION:
+            raise ValueError(
+                f"campaign ledger {path} declares version {int(ver)}; "
+                f"this build reads v{CAMPAIGN_LEDGER_VERSION}")
+        alpha = float(alpha)
+        return cls(np.asarray(gids, np.int32), np.asarray(streams, np.int32),
+                   np.asarray(dec, np.int8), np.asarray(phase, np.int8),
+                   int(done), None if np.isnan(alpha) else alpha,
+                   int(np.uint64(digest)))
+
+    def save(self, path: str) -> None:
+        """Write the 8-leaf cell-keyed wire layout (atomic)."""
+        ckpt_io.save(path, [
+            np.int64(CAMPAIGN_LEDGER_VERSION),
+            np.asarray(self.gen_ids, np.int32),
+            np.asarray(self.streams, np.int32),
+            np.asarray(self.decisions, np.int8),
+            np.asarray(self.decided_phase, np.int8),
+            np.int64(self.phases_done),
+            np.float64(np.nan if self.alpha is None else self.alpha),
+            np.uint64(self.spec_digest)])
+
+    def matches(self, spec: CampaignSpec) -> bool:
+        """Does this ledger describe exactly this campaign — same cells
+        in the same order AND the same decision-relevant configuration
+        (``CampaignSpec.digest``: battery, waves, seed, alpha, policy,
+        stream_check, span)? A resumed campaign refuses otherwise — cell
+        decisions are only meaningful for the campaign that made them."""
+        want_g = np.asarray([GEN_IDS[g] for g, _ in spec.cells], np.int32)
+        want_s = np.asarray([s for _, s in spec.cells], np.int32)
+        return (self.gen_ids.shape == want_g.shape
+                and bool(np.all(self.gen_ids == want_g))
+                and bool(np.all(self.streams == want_s))
+                and (self.alpha is None or self.alpha == spec.alpha)
+                and self.spec_digest == spec.digest())
+
+
+# ---------------------------------------------------------------------------
 # session + compile cache
 
 
@@ -321,6 +558,7 @@ class PoolSession:
 
     @property
     def n_workers(self) -> int:
+        """Current pool width (a runtime property — see ``resize``)."""
         return int(self.mesh.devices.size)
 
     def resize(self, n_workers: int) -> int:
@@ -352,6 +590,7 @@ class PoolSession:
 
     @property
     def total_traces(self) -> int:
+        """Round-program traces so far (compile-cache accounting)."""
         return sum(self.trace_counts.values())
 
     def cache_key(self, spec: RunSpec) -> tuple:
@@ -395,16 +634,21 @@ class PoolSession:
         pool width x G generators. ``n_gens`` overrides the spec's width —
         adaptive runs shrink the vmapped gen_ids axis as failed generators
         drop out — and each (width, G) pair is its own cached executable,
-        so resizing back to a width seen before recompiles nothing."""
+        so resizing back to a width seen before recompiles nothing.
+        Specs carrying ``offsets`` compile the grid runner (the offset is
+        a runtime argument, so ONE executable serves every cell offset of
+        a campaign — wave after wave, knockout after knockout)."""
         key = self.cache_key(spec)
         compiled = self._compiled(spec)
         g = spec.n_generators if n_gens is None else n_gens
-        rk = (self.n_workers, g)
+        grid = spec.offsets is not None
+        rk = (self.n_workers, g, grid)
         runner = compiled.runners.get(rk)
         if runner is None:
             def on_trace():
                 self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
-            make = make_round_runner if g == 1 else make_fanout_runner
+            make = (make_grid_runner if grid
+                    else make_round_runner if g == 1 else make_fanout_runner)
             runner = make(compiled.jobs, self.mesh, on_trace=on_trace)
             compiled.runners[rk] = runner
         return runner
@@ -510,10 +754,12 @@ class BatteryRun:
 
     @property
     def pending_rounds(self) -> int:
+        """Rounds still queued for dispatch."""
         return len(self._queue)
 
     @property
     def done(self) -> bool:
+        """True when nothing is queued and no job is missing/held."""
         return not self._queue and not self._missing()
 
     def poll(self) -> dict:
@@ -556,6 +802,14 @@ class BatteryRun:
             return self._verdicts[0]
         return {gen: self._verdicts[g]
                 for g, gen in enumerate(self.spec.generators)}
+
+    def verdicts_by_position(self) -> List[stitch.Verdict]:
+        """Interim verdicts indexed by generator POSITION in the spec.
+        ``verdict()`` keys by name, which collapses a spec whose
+        generators tuple repeats a name — exactly what a campaign grid
+        does (one position per (generator, sub-stream) cell)."""
+        self._update_verdicts()
+        return list(self._verdicts)
 
     def cancel(self) -> int:
         """condor_rm: drop every pending round. Returns the number of
@@ -642,6 +896,8 @@ class BatteryRun:
         return self._finalize()
 
     def status(self) -> dict:
+        """One condor_q-shaped snapshot: state, job/round counters, the
+        HELD set and the per-generator interim verdicts."""
         state = ("done" if self.done
                  else "running" if self._queue
                  else "cancelled" if self.cancelled else "held")
@@ -674,7 +930,17 @@ class BatteryRun:
         if not active:
             return
         runner = self.session._runner(self.spec, n_gens=len(active))
-        if len(active) == 1:
+        if self.spec.offsets is not None:
+            seeds = np.asarray([self.spec.seeds[g] for g in active],
+                               np.int32)
+            gids = np.asarray([GEN_IDS[self.spec.generators[g]]
+                               for g in active], np.int32)
+            offs = np.asarray([self.spec.offsets[g] for g in active],
+                              np.int64)
+            stats, ps = runner(row, seeds, gids, offs)
+            stats, ps = np.asarray(stats), np.asarray(ps)
+            per_gen = [(g, stats[a], ps[a]) for a, g in enumerate(active)]
+        elif len(active) == 1:
             g0 = active[0]
             stats, ps = runner(row, np.int32(self.spec.seeds[g0]),
                                np.int32(GEN_IDS[self.spec.generators[g0]]))

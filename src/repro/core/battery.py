@@ -18,7 +18,7 @@ from repro.stats import backends as B
 KERNEL_WEIGHT = {
     "birthday": 1.0, "collision": 1.0, "gap": 1.2, "poker": 1.0,
     "coupon": 6.0, "maxoft": 1.0, "weight": 0.6, "rank": 8.0,
-    "hamcorr": 0.6, "serial2d": 0.8,
+    "hamcorr": 0.6, "serial2d": 0.8, "pairstream": 0.6,
 }
 
 # Historical discriminating power per kernel, seeded from the known-bad
@@ -34,6 +34,9 @@ DISCRIMINATION = {
     "weight": 1.0, "rank": 1.0, "hamcorr": 0.8,
     "birthday": 0.3, "serial2d": 0.3, "collision": 0.2,
     "gap": 0.15, "maxoft": 0.15, "poker": 0.1, "coupon": 0.05,
+    # pairstream is a machinery check (seam disjointness), not a quality
+    # test — any signal at all is a hard failure, so it screens first
+    "pairstream": 1.0,
 }
 
 
@@ -75,6 +78,7 @@ _WORDS = {
     "rank": lambda k: k.get("n_mats", 1024) * 32,
     "hamcorr": lambda k: k.get("n", 65536),
     "serial2d": lambda k: k.get("n", 65536) * 2,
+    "pairstream": lambda k: k.get("n", 32768) * 2,
 }
 
 
@@ -149,6 +153,20 @@ def _scaled(kw, kname, scale):
     return kw
 
 
+# The stream-seam battery (campaign subsystem, DESIGN.md §8): four
+# pairstream variants over ONE shared block size, so every entry reads
+# the same 2n-word window and the campaign can align all of them on the
+# same adjacent-stream seam (rng.generators.seam_offsets). Modes probe
+# different failure shapes of the offset machinery: float correlation,
+# bit-level correlation, exact duplication, off-by-k seams.
+_PAIRSTREAM = [
+    ("pairstream", dict(n=32768, mode="corr")),
+    ("pairstream", dict(n=32768, mode="hamcorr")),
+    ("pairstream", dict(n=32768, mode="match")),
+    ("pairstream", dict(n=32768, mode="shift")),
+]
+
+
 def build_battery(name: str, scale: float = 1.0,
                   backend: str = "reference") -> List[TestEntry]:
     """Battery job table. ``backend`` selects the kernel implementation
@@ -157,6 +175,8 @@ def build_battery(name: str, scale: float = 1.0,
     backend = B.resolve(backend)
     if name == "smallcrush":
         combos = [(k, _scaled(kw, k, scale)) for k, kw in _BASE]
+    elif name == "pairstream":
+        combos = [(k, _scaled(kw, k, scale)) for k, kw in _PAIRSTREAM]
     elif name in ("crush", "bigcrush"):
         target = 96 if name == "crush" else 106
         combos = []

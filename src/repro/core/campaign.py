@@ -1,0 +1,327 @@
+"""Generator-fleet screening campaigns (DESIGN.md §8).
+
+The paper turned ONE five-hour battery into a fleet of small jobs on
+idle machines. The modern version of that workload is not one generator
+but a FAMILY: which of G generators x S parallel sub-streams pass
+together (Wartel & Hill 2026; Antunes et al. 2024 — PAPERS.md)? A
+``Campaign`` screens that declarative grid in WAVES:
+
+  phase 0   ``pairstream`` seam battery — the inter-stream
+            disjointness/correlation check over adjacent sub-streams
+            (stats/tests.pairstream at rng.generators.seam_offsets);
+            a failed seam knocks out both cells that share it.
+  phase 1+  the target battery at each wave scale, cheapest first
+            (``scheduler.wave_schedule``); every cell the sequential
+            verdict engine FAILs is knocked out of all later waves.
+
+Each phase is ONE ``RunSpec`` whose generators tuple enumerates the
+surviving cells and whose ``offsets`` tuple places each cell in its own
+sub-stream — so a whole wave is one batched multi-generator dispatch
+per round, on the session's cached grid executable. Offsets are runtime
+arguments and the cell axis is padded to power-of-two buckets, so
+knockouts never retrace: a campaign's compile count scales with the
+number of phases, not the number of cells (asserted via the session's
+trace counts in ``tests/test_campaign.py``).
+
+Progress lives in the cell-keyed ``CampaignLedger`` (api.py, the v3
+checkpoint discipline) plus one per-phase run checkpoint, so an
+interrupted campaign resumes mid-wave with knocked-out cells still
+knocked out.
+
+Typical use::
+
+    session = PoolSession()
+    spec = CampaignSpec("smallcrush", generators=("splitmix64", "pcg32"),
+                        n_streams=4, waves=(0.25, 1.0),
+                        ledger_path="campaign.ck")
+    result = Campaign(session, spec).run()
+    print(result.report)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.ckpt import io as ckpt_io
+from repro.core import stitch
+from repro.core.api import (CELL_FAIL, CELL_PASS, CELL_UNDECIDED,
+                            CampaignLedger, CampaignSpec, PoolSession,
+                            RunSpec)
+from repro.core.battery import build_battery, max_words
+from repro.core.pool import word_bucket
+from repro.core.scheduler import wave_schedule
+from repro.rng.generators import seam_offsets, stream_offsets
+
+
+def default_span(spec: CampaignSpec) -> int:
+    """The sub-stream spacing (words) that keeps every cell's reads in
+    its own stream: the widest block any job of any wave's battery (or
+    the seam check's half-block) consumes, rounded up to a power of two
+    (``pool.word_bucket`` — same bucketing discipline as generation).
+    A pure function of the spec, so ledgers and resumes agree on it."""
+    words = 0
+    for scale in sorted(set(spec.waves)):
+        words = max(words, max_words(build_battery(spec.battery, scale)))
+    if spec.stream_check and spec.n_streams > 1:
+        pair = build_battery("pairstream", _stream_check_scale(spec))
+        words = max(words, max_words(pair) // 2)
+    return word_bucket(max(words, 1))
+
+
+def _stream_check_scale(spec: CampaignSpec) -> float:
+    """The seam battery runs at the cheapest wave's scale — it is a
+    machinery check (overlap/correlation at stream seams is ~certain to
+    trip any mode when the offset arithmetic is wrong), so the small
+    screening size is enough and keeps phase 0 cheap."""
+    return min(spec.waves)
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One screening phase: a battery at a scale, plus the per-cell
+    offset rule ("stream" = cells read their own sub-stream; "seam" =
+    cells straddle their right-hand seam for the pairstream check)."""
+    name: str
+    battery: str
+    scale: float
+    offset_rule: str            # "stream" | "seam"
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """Outcome of a campaign: the per-cell decision matrix and the
+    knockout history, plus the aggregate execution counters."""
+    spec: CampaignSpec
+    cells: List[Tuple[str, int]]
+    decisions: np.ndarray           # (C,) CELL_* codes, cell order
+    decided_phase: np.ndarray       # (C,) phase index, -1 undecided
+    phase_names: List[str]
+    rounds_run: int
+    wall_s: float
+
+    @property
+    def matrix(self) -> np.ndarray:
+        """(generators, streams) decision matrix (CELL_* codes)."""
+        return stitch.campaign_matrix(self.decisions,
+                                      len(self.spec.generators),
+                                      self.spec.n_streams)
+
+    @property
+    def report(self) -> str:
+        """The rendered screening matrix + knockout summary."""
+        return stitch.campaign_report(self.spec.generators,
+                                      self.spec.n_streams, self.decisions,
+                                      self.decided_phase, self.phase_names)
+
+    def decision(self, gen: str, stream: int = 0) -> str:
+        """PASS/FAIL/UNDECIDED for one (generator, stream) cell."""
+        i = self.cells.index((gen, stream))
+        return {CELL_UNDECIDED: stitch.UNDECIDED, CELL_PASS: stitch.PASS,
+                CELL_FAIL: stitch.FAIL}[int(self.decisions[i])]
+
+    @property
+    def survivors(self) -> List[Tuple[str, int]]:
+        """Cells that passed every wave."""
+        return [c for c, d in zip(self.cells, self.decisions)
+                if d == CELL_PASS]
+
+    @property
+    def knockouts(self) -> List[Tuple[str, int]]:
+        """Cells knocked out by some phase."""
+        return [c for c, d in zip(self.cells, self.decisions)
+                if d == CELL_FAIL]
+
+
+class Campaign:
+    """Driver for one ``CampaignSpec`` on a ``PoolSession``.
+
+    Build it, call ``run()``; with a ``ledger_path`` the campaign is
+    restartable at both granularities (phase list + mid-phase rounds).
+    The session outlives the campaign — screening several campaigns on
+    one session shares every compiled executable the grids have in
+    common."""
+
+    def __init__(self, session: PoolSession, spec: CampaignSpec):
+        self.session = session
+        self.spec = spec
+        need = default_span(spec)
+        self.span = spec.span if spec.span is not None else need
+        if spec.n_streams > 1 and self.span < need:
+            raise ValueError(
+                f"span={self.span} is narrower than the widest job "
+                f"block ({need} words incl. bucketing); sub-streams "
+                "would overlap")
+        self.rounds_run = 0
+        self.ledger = self._load_ledger()
+
+    # -- grid bookkeeping --------------------------------------------------
+
+    def phases(self) -> List[Phase]:
+        """The campaign's phase list: the seam check (grids with >1
+        stream), then the waves in ascending-scale order."""
+        out = []
+        if self.spec.stream_check and self.spec.n_streams > 1:
+            out.append(Phase("streamcheck", "pairstream",
+                             _stream_check_scale(self.spec), "seam"))
+        for scale in wave_schedule(self.spec.waves):
+            out.append(Phase(f"x{scale:g}", self.spec.battery, scale,
+                             "stream"))
+        return out
+
+    def _load_ledger(self) -> CampaignLedger:
+        path = self.spec.ledger_path
+        if path and ckpt_io.exists(path):
+            ledger = CampaignLedger.load(path)
+            if not ledger.matches(self.spec):
+                raise ValueError(
+                    f"campaign ledger {path} was written by a different "
+                    "campaign configuration (grid, battery, waves, seed, "
+                    "alpha, policy, stream_check or span) — refusing to "
+                    "resume; delete the ledger to start fresh")
+            return ledger
+        return CampaignLedger.fresh(self.spec)
+
+    def _save_ledger(self) -> None:
+        if self.spec.ledger_path:
+            self.ledger.save(self.spec.ledger_path)
+
+    def _survivor_idx(self) -> List[int]:
+        """Grid-cell positions still in play."""
+        return [i for i, d in enumerate(self.ledger.decisions)
+                if d == CELL_UNDECIDED]
+
+    # -- phase execution ---------------------------------------------------
+
+    def _phase_cells(self, phase: Phase) -> List[Tuple[int, ...]]:
+        """The cells a phase dispatches, as tuples of GRID cell indices:
+        a wave runs each surviving cell ``(i,)``; the seam check runs
+        each adjacent PAIR ``(i, i+1)`` whose two cells both survive
+        (its verdict binds both)."""
+        alive = set(self._survivor_idx())
+        if phase.offset_rule == "stream":
+            return [(i,) for i in sorted(alive)]
+        S = self.spec.n_streams
+        pairs = []
+        for i in sorted(alive):
+            if (i % S) < S - 1 and (i + 1) in alive:
+                pairs.append((i, i + 1))
+        return pairs
+
+    def _cell_offset(self, phase: Phase, cell_group: Tuple[int, ...],
+                     pair_words: int) -> int:
+        """The word offset the phase's RunSpec assigns this dispatch
+        position (``stream_offsets``/``seam_offsets`` grids)."""
+        s = int(self.ledger.streams[cell_group[0]])
+        if phase.offset_rule == "stream":
+            return int(stream_offsets(s + 1, self.span)[s])
+        return int(seam_offsets(s + 2, self.span, pair_words)[s])
+
+    def _run_phase(self, k: int, phase: Phase) -> bool:
+        """Drive one phase to its verdicts; returns True when the phase
+        COMPLETED (every dispatched cell reached a decision or ran its
+        full battery). False means jobs stayed HELD through the retry
+        budget — the phase's partial checkpoint is kept and the caller
+        must not advance past it, so a resume retries the phase instead
+        of freezing its undecided cells forever."""
+        groups = self._phase_cells(phase)
+        if not groups:
+            if self.spec.progress:
+                print(f"phase {k} ({phase.name}): no surviving cells — "
+                      "skipped", flush=True)
+            return True
+        pair_words = 0
+        if phase.offset_rule == "seam":
+            pair_words = max_words(
+                build_battery(phase.battery, phase.scale)) // 2
+        gens = [self.spec.generators[g // self.spec.n_streams]
+                for g in [grp[0] for grp in groups]]
+        offs = [self._cell_offset(phase, grp, pair_words) for grp in groups]
+        # pad the cell axis to its power-of-two bucket (repeat cell 0;
+        # padding results are discarded) so knockouts between waves
+        # re-enter seen grid shapes instead of retracing — word_bucket
+        # is the same rounding rule generation uses
+        n_real = len(groups)
+        pad = word_bucket(max(n_real, 1)) - n_real
+        gens += [gens[0]] * pad
+        offs += [offs[0]] * pad
+        ck = (f"{self.spec.ledger_path}.phase{k}"
+              if self.spec.ledger_path else None)
+        spec = RunSpec(phase.battery, generators=tuple(gens),
+                       seeds=(self.spec.seed,), scale=phase.scale,
+                       policy=self.spec.policy, retry=self.spec.retry,
+                       alpha=self.spec.alpha,
+                       backend=self.spec.backend, offsets=tuple(offs),
+                       checkpoint_path=ck, progress=self.spec.progress)
+        if self.spec.progress:
+            print(f"phase {k} ({phase.name}): {n_real} cell(s) "
+                  f"(+{pad} pad) on battery={phase.battery} "
+                  f"scale={phase.scale:g}", flush=True)
+        handle = self.session.submit(spec)
+        retries = 0
+        while True:
+            while handle.pending_rounds:
+                handle.poll()
+                if all(v.decided for v in
+                       handle.verdicts_by_position()[:n_real]):
+                    handle.cancel()     # every real cell decided early
+                    break
+            if handle.done or handle.cancelled:
+                break
+            if not handle.held() or retries >= spec.retry.max_retries:
+                break
+            retries += 1
+            handle.release()
+        self.rounds_run += handle.rounds_run
+        verdicts = handle.verdicts_by_position()[:n_real]
+        for grp, v in zip(groups, verdicts):
+            if v.decision == stitch.FAIL:
+                for i in grp:           # a failed seam binds both cells
+                    self.ledger.decisions[i] = CELL_FAIL
+                    self.ledger.decided_phase[i] = k
+            elif (v.decision == stitch.PASS and phase.offset_rule == "stream"
+                  and k == len(self.phases()) - 1):
+                i = grp[0]              # survived the final wave
+                self.ledger.decisions[i] = CELL_PASS
+                self.ledger.decided_phase[i] = k
+        return handle.done or handle.cancelled
+
+    # -- public ------------------------------------------------------------
+
+    def run(self) -> CampaignResult:
+        """Drive every remaining phase (resuming from the ledger) and
+        return the per-cell decision matrix. An incomplete phase (jobs
+        HELD through the retry budget) stops the campaign at that phase
+        with its cells undecided; the saved ledger + per-phase
+        checkpoint make the next ``run()`` retry it."""
+        t0 = time.time()
+        phases = self.phases()
+        for k in range(self.ledger.phases_done, len(phases)):
+            completed = self._run_phase(k, phases[k])
+            if not completed:
+                self._save_ledger()     # decisions so far; phase k retries
+                break
+            self.ledger.phases_done = k + 1
+            self._save_ledger()
+            # drop the phase's resume file only AFTER the ledger records
+            # the phase as done — a crash between the two must lose the
+            # checkpoint-or-progress, never both
+            ck = (f"{self.spec.ledger_path}.phase{k}"
+                  if self.spec.ledger_path else None)
+            if ck and ckpt_io.exists(ck):
+                os.remove(ck)
+        return CampaignResult(
+            self.spec, self.spec.cells,
+            np.asarray(self.ledger.decisions, np.int8).copy(),
+            np.asarray(self.ledger.decided_phase, np.int8).copy(),
+            [p.name for p in phases], self.rounds_run,
+            time.time() - t0)
+
+
+def screen(spec: CampaignSpec,
+           session: Optional[PoolSession] = None) -> CampaignResult:
+    """One-call campaign: build a session (or reuse one) and run."""
+    return Campaign(session or PoolSession(), spec).run()

@@ -40,6 +40,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
+    """A placement: (rounds, workers) job-index grid plus the makespan
+    estimates the policies compete on."""
     assignment: np.ndarray          # (rounds, workers) int32 job index, -1 idle
     mode: str
     est_makespan: float             # sum over rounds of max worker cost
@@ -47,6 +49,7 @@ class Plan:
 
     @property
     def rounds(self) -> int:
+        """Batches the plan dispatches (the paper's ceil(K/W))."""
         return self.assignment.shape[0]
 
 
@@ -106,10 +109,12 @@ class SchedulePolicy(Protocol):
     name: str
 
     def plan(self, costs: Sequence[float], n_workers: int) -> Plan:
+        """Place jobs with the given costs onto ``n_workers`` slots."""
         ...
 
     def decompose(self, entries, n_workers: Optional[int] = None
                   ) -> Optional[list]:
+        """Optionally expand the battery into sub-jobs (None = as-is)."""
         ...
 
     def signature(self) -> Optional[tuple]:
@@ -120,33 +125,43 @@ class SchedulePolicy(Protocol):
 
 @dataclasses.dataclass(frozen=True)
 class RoundRobinPolicy:
+    """The paper's placement: fill rounds in battery order (§11's
+    ceil(K/W) batch model, reproduced exactly)."""
     name: str = "roundrobin"
 
     def plan(self, costs, n_workers):
+        """Identity-order round fill."""
         costs = np.asarray(costs, np.float64)
         return _finish_plan(_roundrobin_plan(costs, n_workers), costs,
                             n_workers, self.name)
 
     def decompose(self, entries, n_workers):
+        """Never decomposes."""
         return None
 
     def signature(self):
+        """No decomposition -> no compile-cache component."""
         return None
 
 
 @dataclasses.dataclass(frozen=True)
 class LPTPolicy:
+    """Longest-processing-time-first: strictly better makespan than
+    round-robin whenever test costs are skewed (TestU01's are)."""
     name: str = "lpt"
 
     def plan(self, costs, n_workers):
+        """Greedy LPT onto the least-loaded worker."""
         costs = np.asarray(costs, np.float64)
         return _finish_plan(_lpt_plan(costs, n_workers), costs, n_workers,
                             self.name)
 
     def decompose(self, entries, n_workers):
+        """Never decomposes."""
         return None
 
     def signature(self):
+        """No decomposition -> no compile-cache component."""
         return None
 
 
@@ -169,11 +184,14 @@ class OverDecomposePolicy:
     combine: str = "stouffer"
 
     def plan(self, costs, n_workers):
+        """LPT over the (already expanded) job table."""
         costs = np.asarray(costs, np.float64)
         return _finish_plan(_lpt_plan(costs, n_workers), costs, n_workers,
                             self.name)
 
     def decompose(self, entries, n_workers=None):
+        """Split over-threshold tests into lambda-invariant sub-jobs
+        (see the class docstring; None when nothing splits)."""
         from repro.core.battery import split_entry
         if not entries:                         # replan of nothing: no table
             return None
@@ -191,6 +209,7 @@ class OverDecomposePolicy:
         return jobs
 
     def signature(self):
+        """The decomposition parameters ARE the compiled-table identity."""
         return (self.name, self.max_parts, self.threshold)
 
 
@@ -218,6 +237,7 @@ class AdaptivePolicy:
     name: str = "adaptive"
 
     def plan(self, costs, n_workers):
+        """Cost-only fallback order (cheapest first)."""
         costs = np.asarray(costs, np.float64)
         order = np.argsort(costs, kind="stable")        # cheap first
         return _ordered_plan([int(i) for i in order], costs, n_workers,
@@ -236,9 +256,11 @@ class AdaptivePolicy:
         return _ordered_plan(order, costs, n_workers, self.name)
 
     def decompose(self, entries, n_workers):
+        """Never decomposes."""
         return None
 
     def signature(self):
+        """No decomposition -> no compile-cache component."""
         return None
 
 
@@ -246,6 +268,7 @@ POLICIES: Dict[str, SchedulePolicy] = {}
 
 
 def register_policy(policy: SchedulePolicy) -> SchedulePolicy:
+    """Add a policy to the registry under ``policy.name`` (last wins)."""
     POLICIES[policy.name] = policy
     return policy
 
@@ -257,6 +280,7 @@ register_policy(AdaptivePolicy())
 
 
 def get_policy(policy: Union[str, SchedulePolicy]) -> SchedulePolicy:
+    """Resolve a mode string (or pass a policy object through)."""
     if isinstance(policy, str):
         try:
             return POLICIES[policy]

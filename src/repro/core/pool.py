@@ -21,6 +21,10 @@ which is what ``PoolSession``'s compile cache exploits):
   ``make_fanout_runner``  the same round vmapped over a ``gen_ids`` axis —
                           G generators assessed in ONE dispatch (multi-
                           generator batteries, Wartel & Hill-style).
+  ``make_grid_runner``    the fan-out with a per-lane runtime stream
+                          offset — the campaign screening grid's
+                          (generator, sub-stream) cells in one dispatch
+                          (core/campaign.py, DESIGN.md §8).
   ``make_batch_runner``   whole plan in one dispatch (benchmarks).
 
 ``on_trace`` (when given) fires once per trace of the round body; the
@@ -91,8 +95,13 @@ def stream_table(entries: List[TestEntry]) -> np.ndarray:
                       np.int32)
 
 
-def _job_fn(entries: List[TestEntry]):
-    """(job_id, seed, gen_id) -> (stat, p). job_id == -1 -> idle.
+def _job_fn(entries: List[TestEntry], with_offset: bool = False):
+    """(job_id, seed, gen_id[, offset]) -> (stat, p). job_id == -1 -> idle.
+
+    ``with_offset=True`` adds a runtime stream-offset argument routed to
+    the generator switch (campaign grids, ``make_grid_runner``); the
+    default path traces exactly the classic three-argument job, so
+    existing executables and trace counts are untouched.
 
     Generation is BUCKETED: jobs are grouped into power-of-two word
     buckets (``bucket_table``) and an inner ``lax.switch`` generates
@@ -116,15 +125,32 @@ def _job_fn(entries: List[TestEntry]):
     n_max = sizes[-1] if sizes else 0
 
     def gen_branch(nb):
-        def gen(seed, gen_id, stream):
+        def gen(seed, gen_id, stream, offset=None):
             with x64():
-                block = gen_block_by_id(gen_id, seed, stream, nb)
+                block = gen_block_by_id(gen_id, seed, stream, nb, offset)
             if nb < n_max:
                 block = jnp.concatenate(
                     [block, jnp.zeros((n_max - nb,), jnp.uint32)])
             return block
         return gen
     gen_branches = [gen_branch(nb) for nb in sizes]
+
+    if with_offset:
+        def run(job_id, seed, gen_id, offset):
+            def idle(_):
+                return jnp.float32(0.0), jnp.float32(jnp.nan)
+
+            def work(ops):
+                seed, gen_id, offset = ops
+                j = jnp.clip(job_id, 0, len(entries) - 1)
+                bits = jax.lax.switch(bucket_ids[j], gen_branches,
+                                      seed, gen_id, streams[j], offset)
+                return jax.lax.switch(j, kernels, bits)
+
+            return jax.lax.cond(job_id < 0, idle, work,
+                                (seed, gen_id, offset))
+
+        return run
 
     def run(job_id, seed, gen_id):
         def idle(_):
@@ -173,6 +199,29 @@ def make_fanout_runner(entries: List[TestEntry], mesh,
         if on_trace is not None:
             on_trace()
         stat, p = jax.vmap(lambda s, g: job(jobs[0], s, g))(seeds, gen_ids)
+        return stat[:, None], p[:, None]
+
+    return under_x64(jax.jit(round_fn))
+
+
+def make_grid_runner(entries: List[TestEntry], mesh,
+                     on_trace: Optional[Callable[[], None]] = None):
+    """Campaign-grid round: (round_assignment (W,), seeds (G,),
+    gen_ids (G,), offsets (G,)) -> stats, ps (G, W). Like the fan-out
+    runner but each lane of the vmapped cell axis also carries a runtime
+    stream offset, so one executable serves every (generator, sub-stream)
+    cell of a screening grid — wave after wave, knockout after knockout,
+    no retrace (DESIGN.md §8)."""
+    job = _job_fn(entries, with_offset=True)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P("workers"), P(), P(), P()),
+        out_specs=(P(None, "workers"), P(None, "workers")), check_vma=False)
+    def round_fn(jobs, seeds, gen_ids, offsets):
+        if on_trace is not None:
+            on_trace()
+        stat, p = jax.vmap(lambda s, g, o: job(jobs[0], s, g, o))(
+            seeds, gen_ids, offsets)
         return stat[:, None], p[:, None]
 
     return under_x64(jax.jit(round_fn))

@@ -28,6 +28,9 @@ def run_battery(battery: str, gen: str, seed: int, mesh,
                 mode: Union[str, SchedulePolicy] = "lpt",
                 checkpoint_path: Optional[str] = None,
                 max_retries: int = 2, progress: bool = False) -> RunResult:
+    """Run one battery for one generator on ``mesh`` and return its
+    stitched ``RunResult`` (the classic one-call surface; see the module
+    docstring for what it delegates to)."""
     spec = RunSpec(battery, generators=(gen,), seeds=(seed,), scale=scale,
                    policy=mode, retry=RetryPolicy(max_retries=max_retries),
                    checkpoint_path=checkpoint_path, progress=progress)

@@ -36,6 +36,33 @@ def make_plan(costs: Sequence[float], n_workers: int,
     return policy.plan(costs, n_workers)
 
 
+def wave_schedule(scales: Sequence[float]) -> list:
+    """Campaign wave order (DESIGN.md §8): the given battery scales
+    sorted ASCENDING, duplicates preserved. Screening cheapest-first
+    maximizes the knockout value of early waves — every cell a cheap
+    wave kills never pays for the expensive confirmation waves — the
+    same philosophy the adaptive policy applies at round level
+    (discrimination/cost priority, §3) lifted to the campaign grid."""
+    out = sorted(float(s) for s in scales)
+    if not out:
+        raise ValueError("a campaign needs at least one wave scale")
+    if any(s <= 0 for s in out):
+        raise ValueError(f"wave scales must be positive, got {out}")
+    return out
+
+
+def wave_makespan(costs: Sequence[float], n_workers: int, n_cells: int,
+                  mode: Union[str, SchedulePolicy] = "lpt") -> tuple:
+    """``(batched, per_cell)`` estimated makespans of one campaign wave
+    over ``n_cells`` grid cells. Batched is the campaign's model — one
+    plan whose round dispatches carry every cell on the vmapped cell
+    axis, so the schedule is paid once; per-cell is the naive loop it
+    replaces (the plan dispatched once per cell). The ratio is the
+    batching win the campaign benchmark measures."""
+    plan = make_plan(costs, n_workers, mode)
+    return plan.est_makespan, plan.est_makespan * max(int(n_cells), 1)
+
+
 def replan(missing: Sequence[int], costs: Sequence[float],
            n_workers: int, mode: Union[str, SchedulePolicy] = "lpt",
            entries: Sequence = None) -> Plan:

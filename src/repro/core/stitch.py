@@ -123,6 +123,7 @@ class Verdict:
 
     @property
     def decided(self) -> bool:
+        """True once the decision is PASS or FAIL (never revisited)."""
         return self.decision != UNDECIDED
 
     def __str__(self):
@@ -167,8 +168,67 @@ def sequential_verdict(results: Dict[int, tuple], n_total: int,
                    int(n_total), tuple(sorted(failed)))
 
 
+# ---------------------------------------------------------------------------
+# campaign matrix + summary report (DESIGN.md §8)
+
+_CELL_GLYPH = {0: "?", 1: "P", 2: "F"}     # api.CELL_UNDECIDED/PASS/FAIL
+
+
+def campaign_matrix(decisions, n_generators: int,
+                    n_streams: int) -> np.ndarray:
+    """The flat cell-ordered decision vector reshaped to the
+    (generators, streams) verdict matrix (cell order is generator-major,
+    matching ``CampaignSpec.cells``)."""
+    d = np.asarray(decisions, np.int8)
+    if d.size != n_generators * n_streams:
+        raise ValueError(f"{d.size} cell decisions for a "
+                         f"{n_generators} x {n_streams} grid")
+    return d.reshape(n_generators, n_streams)
+
+
+def campaign_report(generators, n_streams: int, decisions,
+                    decided_phase, phase_names) -> str:
+    """The campaign's superstitch: the per-cell PASS/FAIL/UNDECIDED
+    matrix (rows = generators, columns = sub-streams; each decided cell
+    shows its verdict glyph and the phase that decided it) plus the
+    knockout summary per phase."""
+    generators = list(generators)
+    mat = campaign_matrix(decisions, len(generators), n_streams)
+    phase = np.asarray(decided_phase, np.int8).reshape(len(generators),
+                                                      n_streams)
+    lines = [
+        "========= campaign screening matrix =========",
+        f"grid: {len(generators)} generator(s) x {n_streams} stream(s)   "
+        f"phases: {', '.join(phase_names)}",
+        "-" * 46,
+        "generator      | " + " ".join(f"s{s:<3d}" for s in range(n_streams)),
+    ]
+    for g, gen in enumerate(generators):
+        cells = []
+        for s in range(n_streams):
+            glyph = _CELL_GLYPH[int(mat[g, s])]
+            tag = f"{glyph}@{int(phase[g, s])}" if mat[g, s] else f"{glyph}  "
+            cells.append(f"{tag:4s}")
+        lines.append(f"{gen:14s} | " + " ".join(cells))
+    lines.append("-" * 46)
+    n_pass = int(np.sum(mat == 1))
+    n_fail = int(np.sum(mat == 2))
+    n_open = int(np.sum(mat == 0))
+    lines.append(f"cells: {mat.size}  pass: {n_pass}  fail: {n_fail}  "
+                 f"undecided: {n_open}")
+    for p, name in enumerate(phase_names):
+        knocked = int(np.sum((phase == p) & (mat == 2)))
+        if knocked:
+            lines.append(f"  phase {p} ({name}): knocked out {knocked} "
+                         f"cell(s)")
+    return "\n".join(lines)
+
+
 def report(entries, results: Dict[int, tuple], gen_name: str,
            seed: int) -> str:
+    """The classic battery text report: one line per test with its
+    (stat, p), MISSING/HELD and SUSPECT flags (TestU01's two-sided
+    convention), and the suspect-count verdict footer."""
     lines = [
         "========= CondorJAX battery results =========",
         f"generator: {gen_name}    seed: {seed}",

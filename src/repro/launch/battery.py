@@ -28,6 +28,18 @@ mid-battery): after the given round the pool is resized to WIDTH and
 the remaining rounds replan onto it, e.g. ``--resize-at 2:4,5:8`` for a
 pool that shrinks to 4 workers after round 2 and grows back to 8 after
 round 5. Stitched p-values are bitwise identical to a fixed-width run.
+
+``--campaign`` switches to generator-FLEET screening (DESIGN.md §8):
+the ``--gen`` list x ``--streams`` sub-stream offsets are screened in
+``--waves`` battery scales (cheapest first), failed cells knocked out
+of later waves, the inter-stream seam check run as phase 0::
+
+  PYTHONPATH=src python -m repro.launch.battery --campaign \
+      --battery smallcrush --gen splitmix64,pcg32,randu --streams 4 \
+      --waves 0.125,0.5 --ledger campaign.ck --json report.json
+
+The output is the per-cell PASS/FAIL matrix; ``--ledger`` makes the
+campaign resumable (knocked-out cells stay knocked out across restarts).
 """
 import argparse
 import json
@@ -69,7 +81,30 @@ def main():
                          "run (elastic re-meshing demo)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write a machine-readable report to this path")
+    ap.add_argument("--campaign", action="store_true",
+                    help="generator-fleet screening: the --gen list x "
+                         "--streams sub-streams screened in --waves "
+                         "scales with knockout (core/campaign.py)")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="sub-stream offsets per generator in a campaign "
+                         "grid (requires counter-based generators)")
+    ap.add_argument("--waves", default=None,
+                    help="comma-separated wave scales for --campaign "
+                         "(default: one wave at --scale)")
+    ap.add_argument("--ledger", default=None,
+                    help="campaign ledger path (resumable screening)")
+    ap.add_argument("--no-stream-check", dest="stream_check",
+                    action="store_false",
+                    help="skip the pairstream seam phase of a campaign")
     args = ap.parse_args()
+    if not args.campaign:
+        for flag, default, name in ((args.waves, None, "--waves"),
+                                    (args.streams, 1, "--streams"),
+                                    (args.ledger, None, "--ledger"),
+                                    (args.stream_check, True,
+                                     "--no-stream-check")):
+            if flag != default:
+                ap.error(f"{name} only applies with --campaign")
     if args.adaptive:
         if args.policy not in ("lpt", "adaptive"):
             ap.error(f"--adaptive selects the adaptive schedule policy; "
@@ -95,7 +130,7 @@ def main():
 
     from repro.core import stitch                     # noqa: E402 (after env)
     from repro.core.api import (                      # noqa: E402
-        BatteryResult, PoolSession, RunSpec)
+        BatteryResult, CampaignSpec, PoolSession, RunSpec)
     from repro.core.policies import RetryPolicy       # noqa: E402
     from repro.launch.mesh import make_pool_mesh      # noqa: E402
 
@@ -103,6 +138,64 @@ def main():
 
     gens = tuple(g.strip() for g in args.gen.split(",") if g.strip())
     session = PoolSession(mesh=make_pool_mesh(args.workers or None))
+
+    if args.campaign:
+        if args.adaptive or args.resize_at or args.ckpt:
+            ap.error("--campaign cannot combine with --adaptive/"
+                     "--resize-at/--ckpt (its own ledger handles resume)")
+        from repro.core.campaign import Campaign      # noqa: E402
+        waves = (tuple(float(w) for w in args.waves.split(","))
+                 if args.waves else (args.scale,))
+        cspec = CampaignSpec(
+            args.battery, generators=gens, n_streams=args.streams,
+            seed=args.seed, waves=waves, alpha=args.alpha,
+            policy=args.policy,
+            retry=RetryPolicy(max_retries=args.retries),
+            backend=args.backend,
+            stream_check=args.stream_check, ledger_path=args.ledger,
+            progress=True)
+        campaign = Campaign(session, cspec)
+        print(f"campaign: {len(gens)} generator(s) x {args.streams} "
+              f"stream(s) | battery={args.battery} waves={waves} "
+              f"span={campaign.span} policy={args.policy} "
+              f"backend={args.backend}")
+        res = campaign.run()
+        print(res.report)
+        print(f"\nwall={res.wall_s:.1f}s rounds={res.rounds_run} "
+              f"traces={session.total_traces}")
+        n_open = len(res.cells) - len(res.survivors) - len(res.knockouts)
+        if args.json_path:
+            payload = {
+                "battery": args.battery, "workers": session.n_workers,
+                "policy": args.policy, "backend": args.backend,
+                "backend_resolved": kernel_backends.resolve(args.backend),
+                "alpha": args.alpha, "seed": args.seed,
+                "wall_s": round(res.wall_s, 3),
+                "rounds_run": res.rounds_run,
+                "campaign": {
+                    "n_streams": args.streams, "waves": list(waves),
+                    "span": campaign.span,
+                    "phases": res.phase_names,
+                    "stream_check": args.stream_check,
+                    "survivors": len(res.survivors),
+                    "knockouts": len(res.knockouts),
+                    "undecided": n_open,
+                    "cells": [
+                        {"gen": g, "stream": s,
+                         "decision": res.decision(g, s),
+                         "phase": (int(res.decided_phase[i])
+                                   if res.decided_phase[i] >= 0 else None)}
+                        for i, (g, s) in enumerate(res.cells)],
+                },
+            }
+            os.makedirs(os.path.dirname(args.json_path) or ".",
+                        exist_ok=True)
+            with open(args.json_path, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"json report -> {args.json_path}")
+        # a completed campaign exits 0 (knockouts are the product, not an
+        # error); undecided cells mean the screening did not finish
+        sys.exit(0 if n_open == 0 else 1)
     launch_workers = session.n_workers          # width before any resize
     spec = RunSpec(args.battery, generators=gens, seeds=(args.seed,),
                    scale=args.scale, policy=args.policy,

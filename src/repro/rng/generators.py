@@ -84,15 +84,23 @@ def msweyl_block(seed, stream, n, offset=0):
 
 def threefry_block(seed, stream, n, offset=0):
     """Threefry in explicit counter mode: word i is
-    ``bits(fold_in(key, offset + i))``, one key-hash per element, vmapped.
+    ``bits(fold_in(fold_in(key, hi32(c)), lo32(c)))`` for the 64-bit
+    counter ``c = offset + i``, one key-hash chain per element, vmapped.
     jax.random.bits over a whole shape is NOT continuation-stable (its
     threefry2x32 pairs the iota's halves, so the pairing depends on the
-    block length) — hashing each counter independently is, at ~2x the
-    hashing cost."""
+    block length) — hashing each counter independently is, at a small
+    constant factor in hashing cost. The counter is folded as two
+    32-bit halves because ``fold_in`` takes 32-bit data: a single
+    truncated fold would silently wrap past 2^32 words and alias
+    distant campaign sub-streams (exactly the overlap the pairstream
+    check exists to rule out)."""
     key = jax.random.fold_in(jax.random.PRNGKey(seed), stream)
-    ctr = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(offset)
-    return jax.vmap(lambda i: jax.random.bits(
-        jax.random.fold_in(key, i), (), jnp.uint32))(ctr)
+    ctr = jnp.arange(n, dtype=jnp.uint64) + _u64(offset)
+    hi = (ctr >> 32).astype(jnp.uint32)
+    lo = (ctr & _u64(MASK32)).astype(jnp.uint32)
+    return jax.vmap(lambda h, l: jax.random.bits(
+        jax.random.fold_in(jax.random.fold_in(key, h), l), (),
+        jnp.uint32))(hi, lo)
 
 
 LCG_A = 6364136223846793005
@@ -348,10 +356,67 @@ COUNTER_BASED = ("splitmix64", "msweyl", "threefry", "pcg32", "lcg64",
                  "xorshift64s", "randu", "minstd")
 
 
-def gen_block_by_id(gen_id, seed, stream, n):
-    """lax.switch-able: uint32[n] block from generator #gen_id."""
-    fns = [functools.partial(g, seed, stream, n) for g in GENERATORS.values()]
+def gen_block_by_id(gen_id, seed, stream, n, offset=None):
+    """lax.switch-able: uint32[n] block from generator #gen_id.
+
+    ``offset=None`` (the classic battery hot path) traces exactly the
+    offset-free branches. A traced ``offset`` reads words
+    ``[offset, offset + n)`` of each counter-based generator's
+    (seed, stream) sequence — the campaign grid's per-cell sub-stream
+    selection (core/campaign.py). Because the offset is a runtime value
+    the jump-ahead ladders fall back to their full 64-bit length
+    (``_jump_bits``); one executable then serves every cell offset.
+    ``mwc`` has no jump-ahead, so its branch folds the offset into the
+    stream id instead (a RESEEDED stream, not a sub-stream) — campaigns
+    with more than one stream refuse mwc up front (``CampaignSpec``),
+    this branch only exists so the switch traces uniformly."""
+    if offset is None:
+        fns = [functools.partial(g, seed, stream, n)
+               for g in GENERATORS.values()]
+        return jax.lax.switch(gen_id, fns)
+
+    def _offset_fn(name, g):
+        if name in COUNTER_BASED:
+            return functools.partial(g, seed, stream, n, offset)
+        return lambda: g(seed,
+                         _u64(stream) + (_u64(offset) << _u64(32)), n)
+    fns = [_offset_fn(name, g) for name, g in GENERATORS.items()]
     return jax.lax.switch(gen_id, fns)
+
+
+# ---------------------------------------------------------------------------
+# campaign stream grids (cycle splitting at the block level)
+
+def stream_offsets(n_streams: int, span: int) -> np.ndarray:
+    """Word offsets of ``n_streams`` disjoint parallel sub-streams spaced
+    ``span`` words apart: stream s owns ``[s * span, (s + 1) * span)`` of
+    every (seed, stream-id) sequence. With ``span >= `` the widest block
+    any battery job reads, cells of a campaign grid consume disjoint
+    words by construction — the modern analogue of the paper's "one
+    generator per idle machine" is "one sub-stream per grid cell"."""
+    if n_streams < 1:
+        raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+    if span < 0:
+        raise ValueError(f"span must be >= 0, got {span}")
+    return np.arange(n_streams, dtype=np.int64) * np.int64(span)
+
+
+def seam_offsets(n_streams: int, span: int, n_words: int) -> np.ndarray:
+    """Block offsets straddling each adjacent-stream SEAM: pair s reads
+    ``[(s+1)*span - n_words, (s+1)*span + n_words)`` — the last
+    ``n_words`` words of stream s followed by the first ``n_words`` of
+    stream s+1. A ``pairstream`` kernel splits that block in half and
+    checks the halves are uncorrelated and disjoint, which is exactly
+    where an off-by-one in the jump-ahead offset arithmetic would show
+    up (overlapping or correlated words across the seam)."""
+    if n_streams < 2:
+        return np.zeros((0,), np.int64)
+    if n_words > span:
+        raise ValueError(
+            f"seam block of {n_words} words needs span >= n_words, "
+            f"got span={span}")
+    seams = np.arange(1, n_streams, dtype=np.int64) * np.int64(span)
+    return seams - np.int64(n_words)
 
 
 def to_unit(bits):

@@ -66,6 +66,7 @@ def register(kname: str, backend: str, fn: Callable) -> None:
 
 
 def families() -> list:
+    """Every registered test family name."""
     return sorted(_REGISTRY)
 
 

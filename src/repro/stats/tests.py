@@ -239,8 +239,55 @@ def serial2d(bits, n=65536, d=64):
     return stat, chi2_sf(stat, d * d - 1)
 
 
+def pairstream(bits, n=32768, mode="corr"):
+    """Inter-stream disjointness/correlation at a sub-stream seam.
+
+    The block is TWO adjacent sub-streams of one generator laid end to
+    end: ``bits[:n]`` is the tail of stream s, ``bits[n:2n]`` the head of
+    stream s+1 (the campaign dispatches this kernel at the seam offsets
+    from ``rng.generators.seam_offsets``). Under the null the halves are
+    independent; a broken jump-ahead offset (overlapping or correlated
+    sub-streams) is exactly what each mode is sensitive to:
+
+      ``corr``     Pearson cross-correlation of the unit floats,
+                   z ~ N(0,1) two-sided
+      ``hamcorr``  cross-correlation of word Hamming weights (catches
+                   bit-level coupling the float map would wash out)
+      ``match``    same-index word equality count ~ Poisson(n / 2^32) —
+                   any match at all is a near-certain duplication
+      ``shift``    equality between h1's last k and h2's first k words,
+                   k = 1..8 — a seam that is off by k (stream s+1
+                   starting k words early) duplicates exactly that
+                   window
+    """
+    a, b = bits[:n], bits[n:2 * n]
+    if mode == "corr":
+        ua = to_unit(a) - 0.5
+        ub = to_unit(b) - 0.5
+        z = jnp.sum(ua * ub) * 12.0 / math.sqrt(n)   # var(U(-.5,.5)) = 1/12
+        return z, normal_p_two_sided(z)
+    if mode == "hamcorr":
+        wa = jax.lax.population_count(a).astype(jnp.float32) - 16.0
+        wb = jax.lax.population_count(b).astype(jnp.float32) - 16.0
+        z = jnp.sum(wa * wb) / (8.0 * math.sqrt(n))  # var(weight) = 8
+        return z, normal_p_two_sided(z)
+    if mode == "match":
+        m = jnp.sum(a == b).astype(jnp.float32)
+        return m, poisson_midp_upper(m, n / 2.0 ** 32)
+    if mode == "shift":
+        maxk = 8
+        m = jnp.float32(0.0)
+        for k in range(1, maxk + 1):
+            m = m + jnp.sum(a[n - k:] == b[:k]).astype(jnp.float32)
+        lam = sum(range(1, maxk + 1)) / 2.0 ** 32
+        return m, poisson_midp_upper(m, lam)
+    raise KeyError(f"unknown pairstream mode {mode!r}; "
+                   "known: corr, hamcorr, match, shift")
+
+
 KERNELS: Dict[str, Callable] = {
     "birthday": birthday, "collision": collision, "gap": gap,
     "poker": poker, "coupon": coupon, "maxoft": maxoft, "weight": weight,
     "rank": rank, "hamcorr": hamcorr, "serial2d": serial2d,
+    "pairstream": pairstream,
 }

@@ -28,6 +28,7 @@ PARITY_CASES = {
     "coupon": [dict(n=4096, d=8)],
     "maxoft": [dict(n=2048, t=8)],
     "hamcorr": [dict(n=4096)],
+    "pairstream": [dict(n=1024, mode="corr"), dict(n=1024, mode="match")],
 }
 
 

@@ -1,0 +1,98 @@
+"""Golden-key tests for the CLI ``--json`` schema — the machine-readable
+contract README.md and the CI gates consume. If a field is renamed or
+dropped, these fail before any README example rots."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RUN_KEYS = {"battery", "scale", "workers", "policy", "backend",
+            "backend_resolved", "adaptive", "alpha", "resizes", "seed",
+            "wall_s", "rounds_run", "retries", "plan_rounds", "runs"}
+PER_GEN_KEYS = {"suspects", "verdict", "tests_checked", "failed_tests",
+                "rounds_run", "tests"}
+TEST_KEYS = {"index", "name", "stat", "p", "suspect"}
+CAMPAIGN_TOP_KEYS = {"battery", "workers", "policy", "backend",
+                     "backend_resolved", "alpha", "seed", "wall_s",
+                     "rounds_run", "campaign"}
+CAMPAIGN_KEYS = {"n_streams", "waves", "span", "phases", "stream_check",
+                 "survivors", "knockouts", "undecided", "cells"}
+CELL_KEYS = {"gen", "stream", "decision", "phase"}
+
+
+def _cli(json_path, *args):
+    env = dict(os.environ, PYTHONPATH="src")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.battery",
+         "--json", json_path, *args],
+        env=env, cwd=REPO, capture_output=True, text=True)
+    assert os.path.exists(json_path), (
+        f"CLI wrote no json report (exit {p.returncode}):\n"
+        f"{p.stdout[-2000:]}\n{p.stderr[-2000:]}")
+    with open(json_path) as f:
+        return p.returncode, json.load(f)
+
+
+@pytest.fixture(scope="module")
+def battery_report(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("cli") / "run.json")
+    code, rep = _cli(path, "--battery", "smallcrush", "--gen",
+                     "splitmix64,randu", "--scale", "0.0625", "--seed",
+                     "7", "--adaptive", "--resize-at", "1:1")
+    return code, rep
+
+
+def test_battery_json_golden_keys(battery_report):
+    _, rep = battery_report
+    assert set(rep) == RUN_KEYS
+    assert set(rep["runs"]) == {"splitmix64", "randu"}
+    for run in rep["runs"].values():
+        assert set(run) == PER_GEN_KEYS
+        for t in run["tests"]:
+            assert set(t) == TEST_KEYS
+
+
+def test_battery_json_backend_fields(battery_report):
+    _, rep = battery_report
+    assert rep["backend"] in ("auto", "reference", "accelerated")
+    assert rep["backend_resolved"] in ("reference", "accelerated")
+
+
+def test_battery_json_resize_fields(battery_report):
+    _, rep = battery_report
+    assert isinstance(rep["resizes"], list) and rep["resizes"]
+    assert set(rep["resizes"][0]) == {"round", "workers"}
+
+
+def test_battery_json_verdict_fields(battery_report):
+    code, rep = battery_report
+    assert rep["adaptive"] is True
+    assert rep["runs"]["randu"]["verdict"] == "FAIL"    # canary
+    assert rep["runs"]["splitmix64"]["verdict"] in ("PASS", "UNDECIDED")
+    assert code == 1                                    # randu failed
+
+
+def test_campaign_json_golden_keys(tmp_path):
+    path = str(tmp_path / "campaign.json")
+    code, rep = _cli(path, "--campaign", "--battery", "smallcrush",
+                     "--gen", "splitmix64,randu", "--streams", "2",
+                     "--waves", "0.0625", "--seed", "7")
+    assert code == 0                # completed screening exits 0
+    assert set(rep) == CAMPAIGN_TOP_KEYS
+    camp = rep["campaign"]
+    assert set(camp) == CAMPAIGN_KEYS
+    assert camp["n_streams"] == 2 and camp["waves"] == [0.0625]
+    assert camp["phases"][0] == "streamcheck"
+    assert len(camp["cells"]) == 4
+    for cell in camp["cells"]:
+        assert set(cell) == CELL_KEYS
+        assert cell["decision"] in ("PASS", "FAIL", "UNDECIDED")
+    by_gen = {c["gen"]: c["decision"] for c in camp["cells"]}
+    assert by_gen["randu"] == "FAIL"
+    assert by_gen["splitmix64"] == "PASS"
+    assert camp["survivors"] + camp["knockouts"] == 4
+    assert camp["undecided"] == 0
