@@ -1,0 +1,46 @@
+"""repro.analysis — repo-aware static analysis for the battery system.
+
+The speedups this reproduction stacks up (compile-once sessions, the
+kernel backend registry, jump-ahead stream offsets, campaign grids) all
+rest on invariants that used to live in reviewer memory. This package
+checks them with a tool instead (DESIGN.md §9): a stdlib-``ast``
+analyzer — no third-party dependencies, importable without JAX — with a
+rule registry mirroring ``stats.backends.register``, stable finding
+codes, inline suppressions, a baseline file for grandfathered findings,
+and a ``python -m repro.analysis`` CLI wired as a CI gate.
+
+Rule families (one module per family under ``repro.analysis.rules``):
+
+  RPA1xx  retrace/sync hazards — Python control flow on traced values,
+          host concretization (``float``/``int``/``np.*``/``.item()``)
+          inside traced code, traced closures mutating Python state
+  RPA2xx  cache-key audit — every ``RunSpec`` field the compiled-program
+          construction reads must appear in the session's trace-cache/
+          table keys (the PR 4 resolved-backend bug class)
+  RPA3xx  kernel contracts — backend registry closure, integer-dtype
+          pins against ambient-x64 promotion (the gf2_rank bug class),
+          Pallas block working sets under a static VMEM budget (the
+          ``HIST_MAX_BINS`` discipline, generalized)
+  RPA4xx  registry/version closure — ``COUNTER_BASED`` vs ``offset``
+          signatures, checkpoint/ledger writer layouts matched by
+          reader upgrade paths (v1/v2/v3 + ``CampaignLedger``)
+  RPA5xx  import-graph reachability — modules unreachable from the
+          battery system carry an explicit quarantine annotation
+
+Inline controls (scanned from source comments, never executed):
+
+  ``# repro: noqa RPA123``             suppress that code on this line
+  ``# repro: quarantine -- reason``    (first lines of a module) exempt
+                                       a dead seed module from analysis
+  ``# repro: runtime-arg``             classify a ``RunSpec`` field as a
+                                       runtime argument, not a key field
+  ``# repro: vmem-bound <const>``      bound a symbolic Pallas block dim
+
+Typical use::
+
+    PYTHONPATH=src python -m repro.analysis --strict --json report.json
+"""
+from repro.analysis.driver import run_analysis  # noqa: F401
+from repro.analysis.model import Baseline, Finding  # noqa: F401
+from repro.analysis.project import Project  # noqa: F401
+from repro.analysis.registry import RULES, get_rule, register, rules  # noqa: F401

@@ -1,0 +1,15 @@
+"""Rule families. Importing this package registers every rule.
+
+One module per family (the code prefix is the family):
+
+  trace.py             RPA1xx  retrace/sync hazards in traced code
+  cachekey.py          RPA2xx  RunSpec -> trace-cache key audit
+  kernels.py           RPA3xx  backend registry + Pallas kernel contracts
+  registry_closure.py  RPA4xx  offset/COUNTER_BASED + wire-version closure
+  reach.py             RPA5xx  import-graph reachability / quarantine
+"""
+from repro.analysis.rules import cachekey  # noqa: F401
+from repro.analysis.rules import kernels  # noqa: F401
+from repro.analysis.rules import reach  # noqa: F401
+from repro.analysis.rules import registry_closure  # noqa: F401
+from repro.analysis.rules import trace  # noqa: F401

@@ -1,0 +1,355 @@
+"""RPA3xx — kernel contracts: registry closure, dtype pins, VMEM budget.
+
+  RPA301  backend registry closure — every kernel family registered with
+          an ``accelerated`` backend must also have a ``reference``
+          entry (``resolve()`` falls back to reference; an accelerated-
+          only family would fail exactly when the fallback matters).
+          Registration sites are collected from direct
+          ``register(name, backend, fn)`` calls AND loops over dict
+          literals (``for k, f in T.KERNELS.items(): register(k, ...)``),
+          resolving the dict across module imports.
+  RPA302  unpinned integer reduction in a Pallas kernel body — the
+          gf2_rank bug class: ``jnp.sum`` over integer data without
+          ``dtype=`` promotes to int64 under ambient x64 and changes
+          the wrapped uint32 arithmetic the kernel relies on. Float
+          operands (tracked through ``.astype(jnp.float32)`` locals)
+          are exempt.
+  RPA303  Pallas block working set — the per-step VMEM working set
+          implied by every ``BlockSpec`` shape in a ``pallas_call``
+          must be statically bounded and under ``VMEM_BUDGET_BYTES``
+          (the ``HIST_MAX_BINS`` discipline, generalized). A dimension
+          that is not literal arithmetic needs an inline
+          ``# repro: vmem-bound <int | dotted.CONST>`` annotation naming
+          its static bound.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.model import VMEM_BOUND_RE, Finding
+from repro.analysis.project import (Project, dotted_name, literal_int)
+from repro.analysis.registry import register
+
+# per-step working-set budget across all blocks of one pallas_call.
+# Real VMEM is ~16 MiB/core; 4 MiB of 4-byte elements leaves headroom
+# for double buffering and scratch, and every shipped kernel fits.
+VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+ELEMENT_BYTES = 4  # uint32/int32/float32 repo-wide
+
+BACKEND_NAMES = {"reference", "accelerated"}
+INT_REDUCTIONS = {"sum", "prod", "cumsum", "cumprod", "dot"}
+FLOAT_PREFIXES = ("float", "bfloat")
+
+
+# -- RPA301 ----------------------------------------------------------------
+
+def _module_dicts(tree: ast.Module) -> Dict[str, ast.Dict]:
+    """Module-level ``NAME = {...}`` / ``NAME: T = {...}`` dict literals."""
+    out: Dict[str, ast.Dict] = {}
+    for node in tree.body:
+        target = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            target = node.targets[0].id
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            target = node.target.id
+        value = getattr(node, "value", None)
+        if target is not None and isinstance(value, ast.Dict):
+            out[target] = value
+    return out
+
+
+def _dict_str_keys(d: ast.Dict) -> Set[str]:
+    return {k.value for k in d.keys
+            if isinstance(k, ast.Constant) and isinstance(k.value, str)}
+
+
+def _import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local alias -> dotted module (``from repro.stats import tests as
+    T`` makes ``T`` -> ``repro.stats.tests``)."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = \
+                    f"{node.module}.{alias.name}"
+    return out
+
+
+def _resolve_dict_keys(project: Project, path: str, tree: ast.Module,
+                       node: ast.expr) -> Optional[Set[str]]:
+    """String keys of the dict literal ``node`` refers to — a local
+    module-level dict or an imported one (``T.KERNELS``)."""
+    local = _module_dicts(tree)
+    if isinstance(node, ast.Name):
+        if node.id in local:
+            return _dict_str_keys(local[node.id])
+        return None
+    dotted = dotted_name(node)
+    if dotted is None or "." not in dotted:
+        return None
+    alias, attr = dotted.rsplit(".", 1)
+    module = _import_aliases(tree).get(alias)
+    if module is None:
+        return None
+    mpath = project.module_path(module)
+    if mpath is None:
+        return None
+    mtree = project.tree(mpath)
+    if mtree is None:
+        return None
+    remote = _module_dicts(mtree)
+    if attr in remote:
+        return _dict_str_keys(remote[attr])
+    return None
+
+
+def _enclosing_for(tree: ast.Module, call: ast.Call
+                   ) -> Optional[ast.For]:
+    """The For loop whose body contains ``call`` (module level only)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.For) and any(
+                call is c for c in ast.walk(node)):
+            return node
+    return None
+
+
+def _registrations(project: Project, path: str, tree: ast.Module
+                   ) -> Dict[str, Set[Tuple[str, int]]]:
+    """backend -> {(family, lineno)} from every ``register(...)`` site."""
+    out: Dict[str, Set[Tuple[str, int]]] = {b: set()
+                                            for b in BACKEND_NAMES}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or len(node.args) < 3:
+            continue
+        fname = dotted_name(node.func) or ""
+        if fname.split(".")[-1] != "register":
+            continue
+        backend_arg = node.args[1]
+        if not (isinstance(backend_arg, ast.Constant)
+                and backend_arg.value in BACKEND_NAMES):
+            continue
+        backend = backend_arg.value
+        name_arg = node.args[0]
+        if isinstance(name_arg, ast.Constant) \
+                and isinstance(name_arg.value, str):
+            out[backend].add((name_arg.value, node.lineno))
+            continue
+        # loop-registration: resolve the iterated dict's keys
+        loop = _enclosing_for(tree, node)
+        if loop is None:
+            continue
+        it = loop.iter
+        if isinstance(it, ast.Call) \
+                and isinstance(it.func, ast.Attribute) \
+                and it.func.attr == "items":
+            keys = _resolve_dict_keys(project, path, tree, it.func.value)
+            if keys is not None:
+                out[backend] |= {(k, loop.lineno) for k in keys}
+    return out
+
+
+@register("RPA301", "backend-registry-closure",
+          "accelerated kernel family registered without a reference "
+          "fallback entry")
+def rpa301(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for path, tree in project.walk():
+        regs = _registrations(project, path, tree)
+        if not regs["accelerated"]:
+            continue
+        reference = {name for name, _ in regs["reference"]}
+        for name, lineno in sorted(regs["accelerated"]):
+            if name not in reference:
+                out.append(Finding(
+                    "RPA301", "backend-registry-closure", path,
+                    lineno, 1,
+                    f"kernel family '{name}' has an accelerated "
+                    f"backend but no reference entry — resolve() "
+                    f"has nothing to fall back to"))
+    return out
+
+
+# -- RPA302 ----------------------------------------------------------------
+
+def _kernel_functions(tree: ast.Module) -> Iterator[ast.FunctionDef]:
+    """Pallas kernel bodies: named first-arg of a ``pallas_call``, or a
+    function whose every parameter is a ``*_ref``."""
+    by_call: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and node.args:
+            fname = dotted_name(node.func) or ""
+            if fname.split(".")[-1] == "pallas_call" \
+                    and isinstance(node.args[0], ast.Name):
+                by_call.add(node.args[0].id)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        args = node.args.posonlyargs + node.args.args
+        all_refs = bool(args) and all(a.arg.endswith("_ref")
+                                      for a in args)
+        if node.name in by_call or all_refs:
+            yield node
+
+
+def _is_float_dtype(node: ast.AST) -> bool:
+    """``jnp.float32`` / ``np.float64`` / ``"float32"``-ish."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.startswith(FLOAT_PREFIXES)
+    dotted = dotted_name(node) or ""
+    return dotted.split(".")[-1].startswith(FLOAT_PREFIXES)
+
+
+def _float_known(node: ast.AST, env: Set[str]) -> bool:
+    """Statically known to be floating point (so integer promotion
+    under ambient x64 cannot change its values)."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.Name):
+        return node.id in env
+    if isinstance(node, ast.Call):
+        # .astype may hang off any expression (a Compare, a slice...),
+        # so check the attribute directly rather than via dotted_name
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "astype" and node.args:
+            return _is_float_dtype(node.args[0])
+        fname = dotted_name(node.func) or ""
+        last = fname.split(".")[-1]
+        if last in {"zeros", "ones", "full", "zeros_like", "ones_like",
+                    "empty"}:
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    return _is_float_dtype(kw.value)
+            # jnp default dtype is float32 (x64 floats don't wrap)
+            return True
+        if last in {"where", "maximum", "minimum", "clip"}:
+            return any(_float_known(a, env) for a in node.args)
+        return False
+    if isinstance(node, ast.BinOp):
+        return _float_known(node.left, env) \
+            or _float_known(node.right, env)
+    return False
+
+
+@register("RPA302", "unpinned-integer-reduction",
+          "integer jnp reduction in a Pallas kernel without a dtype= "
+          "pin (ambient-x64 promotion changes wrapped arithmetic)")
+def rpa302(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for path, tree in project.walk():
+        for fn in _kernel_functions(tree):
+            env: Set[str] = set()
+            for stmt in ast.walk(fn):
+                if isinstance(stmt, ast.Assign) \
+                        and _float_known(stmt.value, env):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            env.add(t.id)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                fname = dotted_name(node.func) or ""
+                parts = fname.split(".")
+                if parts[0] != "jnp" or parts[-1] not in INT_REDUCTIONS:
+                    continue
+                if any(kw.arg == "dtype" for kw in node.keywords):
+                    continue
+                if node.args and _float_known(node.args[0], env):
+                    continue
+                out.append(Finding(
+                    "RPA302", "unpinned-integer-reduction", path,
+                    node.lineno, node.col_offset + 1,
+                    f"`{fname}` in kernel `{fn.name}` has no dtype= "
+                    f"pin — under ambient x64 an integer operand "
+                    f"promotes to int64 and wrapped uint32 arithmetic "
+                    f"changes (the gf2_rank bug class)"))
+    return out
+
+
+# -- RPA303 ----------------------------------------------------------------
+
+def _block_dims(call: ast.Call) -> List[Tuple[ast.expr, int]]:
+    """(dim expression, lineno) for a BlockSpec's shape tuple."""
+    if not call.args:
+        return []
+    shape = call.args[0]
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        return []
+    return [(elt, elt.lineno) for elt in shape.elts]
+
+
+def _blockspecs(call: ast.Call) -> Iterator[ast.Call]:
+    """Every BlockSpec(...) constructor in a pallas_call's in/out specs."""
+    for kw in call.keywords:
+        if kw.arg not in {"in_specs", "out_specs", "scratch_shapes"}:
+            continue
+        for node in ast.walk(kw.value):
+            if isinstance(node, ast.Call):
+                fname = dotted_name(node.func) or ""
+                if fname.split(".")[-1] == "BlockSpec":
+                    yield node
+
+
+def _annotated_bound(project: Project, path: str,
+                     linenos: List[int]) -> Optional[int]:
+    """A ``# repro: vmem-bound <X>`` annotation on any of the lines
+    (trailing on the dim or BlockSpec line, or a full-line comment
+    immediately above the BlockSpec)."""
+    for lineno in linenos:
+        m = VMEM_BOUND_RE.search(project.line(path, lineno))
+        if m:
+            return project.dotted_constant(m.group(1))
+    return None
+
+
+@register("RPA303", "vmem-budget",
+          "Pallas block shapes must be statically bounded and fit the "
+          "VMEM working-set budget")
+def rpa303(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for path, tree in project.walk():
+        consts = project.module_constants(path)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func) or ""
+            if fname.split(".")[-1] != "pallas_call":
+                continue
+            total = 0
+            bounded = True
+            for spec in _blockspecs(node):
+                block = ELEMENT_BYTES
+                for dim, lineno in _block_dims(spec):
+                    val = literal_int(dim, consts)
+                    if val is None:
+                        val = _annotated_bound(
+                            project, path,
+                            [lineno, spec.lineno, spec.lineno - 1])
+                    if val is None:
+                        bounded = False
+                        out.append(Finding(
+                            "RPA303", "vmem-budget", path,
+                            lineno, dim.col_offset + 1,
+                            f"pallas_call block dimension is not "
+                            f"statically bounded — annotate the "
+                            f"BlockSpec with `# repro: vmem-bound "
+                            f"<int | dotted.CONST>` naming its "
+                            f"static bound"))
+                        continue
+                    block *= max(val, 1)
+                total += block
+            if bounded and total > VMEM_BUDGET_BYTES:
+                out.append(Finding(
+                    "RPA303", "vmem-budget", path,
+                    node.lineno, node.col_offset + 1,
+                    f"pallas_call working set is {total} bytes "
+                    f"({total // 1024} KiB) of 4-byte elements — "
+                    f"over the {VMEM_BUDGET_BYTES // (1024 * 1024)} "
+                    f"MiB VMEM budget; shrink the block shapes or "
+                    f"add a grid dimension"))
+    return out

@@ -1,0 +1,351 @@
+"""RPA1xx — retrace/sync hazards inside traced functions.
+
+The battery hot path stays fast only while its jitted round functions
+compile once and never sync. The classic ways to lose that silently:
+
+  RPA101  Python ``if``/``while``/``assert`` on a traced value — either a
+          TracerBoolConversionError at runtime or, worse, a retrace per
+          distinct concrete value when the operand happens to be weakly
+          typed.
+  RPA102  host concretization inside traced code — ``float()``/``int()``/
+          ``bool()`` or a ``np.*`` call on a traced value, or ``.item()``;
+          each one is a device sync and a trace-time constant bake.
+  RPA103  a traced function mutating closed-over Python state (appending
+          to a module-level list, writing a global dict): the mutation
+          happens at *trace* time, once per compilation, not per call.
+
+What counts as traced code:
+
+  * every function in the known-traced modules (``rng/generators.py``,
+    ``stats/tests.py``, ``stats/backends.py``, ``stats/special.py``,
+    ``core/pool.py``, everything under ``kernels/``),
+  * any function decorated with ``jit`` / ``shard_map`` /
+    ``functools.partial(shard_map, ...)`` / ``pl.when(...)``,
+  * any function passed by name into a ``jax.*`` transform or a
+    ``pallas_call`` (``jax.lax.cond``/``switch``/``scan`` operands, etc.),
+  * Pallas kernel bodies (every parameter ends in ``_ref``).
+
+Taintedness is deliberately conservative: a value is traced when it is
+(derived from) the result of a ``jnp.*``/``jax.*`` call. Function
+parameters are NOT assumed traced — battery kernels take static shape
+params (``kbits``, ``maxlen``) alongside traced arrays, and flagging
+``float(1 << kbits)`` would drown the signal. ``.shape``/``.dtype``/
+``.ndim``/``.size`` reads are always static.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.model import Finding
+from repro.analysis.project import Project, dotted_name
+from repro.analysis.registry import register
+
+# modules whose every function body runs under trace (prefix match)
+TRACED_MODULE_PATHS = (
+    "src/repro/core/pool.py",
+    "src/repro/rng/generators.py",
+    "src/repro/stats/tests.py",
+    "src/repro/stats/backends.py",
+    "src/repro/stats/special.py",
+    "src/repro/kernels/",
+)
+
+# attribute reads that are static even on traced values
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+# call roots whose results are traced values
+TRACED_ROOTS = {"jnp", "jax"}
+
+# builtins / namespaces that concretize (sync) a traced operand
+CONCRETIZERS = {"float", "int", "bool"}
+HOST_ROOTS = {"np", "numpy"}
+
+# mutating method names on closed-over containers
+MUTATORS = {"append", "add", "update", "extend", "insert", "pop",
+            "setdefault", "clear", "remove", "discard"}
+
+
+def _decorator_traced(dec: ast.AST) -> bool:
+    """``@jax.jit`` / ``@jit`` / ``@functools.partial(shard_map, ...)`` /
+    ``@pl.when(...)`` — the decorated function body is traced."""
+    name = dotted_name(dec)
+    if name is not None:
+        return name.split(".")[-1] in {"jit", "shard_map"}
+    if isinstance(dec, ast.Call):
+        fname = dotted_name(dec.func) or ""
+        last = fname.split(".")[-1]
+        if last in {"jit", "shard_map", "when"}:
+            return True
+        if last == "partial" and dec.args:
+            inner = dotted_name(dec.args[0]) or ""
+            return inner.split(".")[-1] in {"jit", "shard_map"}
+    return False
+
+
+def _names_passed_to_transforms(tree: ast.Module) -> Set[str]:
+    """Function names handed to ``jax.*`` transforms / ``shard_map`` /
+    ``pallas_call`` anywhere in the module — their bodies are traced."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func) or ""
+        last = fname.split(".")[-1]
+        if not (fname.startswith("jax.")
+                or last in {"shard_map", "pallas_call", "jit", "vmap"}):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                out.add(arg.id)
+            elif isinstance(arg, (ast.List, ast.Tuple)):
+                for elt in arg.elts:
+                    if isinstance(elt, ast.Name):
+                        out.add(elt.id)
+    return out
+
+
+def _is_kernel_body(fn: ast.FunctionDef) -> bool:
+    """Pallas kernels take only ``*_ref`` parameters."""
+    args = fn.args.posonlyargs + fn.args.args
+    return bool(args) and all(a.arg.endswith("_ref") for a in args)
+
+
+def _functions(tree: ast.Module) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def traced_functions(path: str, tree: ast.Module
+                     ) -> List[ast.FunctionDef]:
+    """The functions in ``path`` whose bodies run under trace."""
+    module_traced = any(path.startswith(p) for p in TRACED_MODULE_PATHS)
+    by_call = _names_passed_to_transforms(tree)
+    out = []
+    for fn in _functions(tree):
+        if (module_traced or fn.name in by_call
+                or any(_decorator_traced(d) for d in fn.decorator_list)
+                or _is_kernel_body(fn)):
+            out.append(fn)
+    return out
+
+
+def _tainted(node: ast.AST, env: Set[str]) -> bool:
+    """Is this expression (derived from) a traced value?"""
+    if isinstance(node, ast.Attribute):
+        if node.attr in STATIC_ATTRS:
+            return False
+        return _tainted(node.value, env)
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func) or ""
+        if fname.split(".")[0] in TRACED_ROOTS:
+            return True
+        return (any(_tainted(a, env) for a in node.args)
+                or any(_tainted(k.value, env) for k in node.keywords)
+                or _tainted(node.func, env))
+    if isinstance(node, ast.Name):
+        return node.id in env
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.Lambda)):
+        return False
+    return any(_tainted(child, env)
+               for child in ast.iter_child_nodes(node))
+
+
+def _own_statements(fn: ast.FunctionDef) -> Iterator[ast.stmt]:
+    """Statements of ``fn`` excluding nested def bodies (nested traced
+    functions are analyzed on their own; attributing their hazards to the
+    enclosing function would double-report)."""
+    stack: List[ast.stmt] = list(fn.body)
+    while stack:
+        stmt = stack.pop(0)
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for field in ("body", "orelse", "finalbody", "handlers"):
+            for child in getattr(stmt, field, []):
+                if isinstance(child, ast.ExceptHandler):
+                    stack.extend(child.body)
+                elif isinstance(child, ast.stmt):
+                    stack.append(child)
+
+
+def _local_names(fn: ast.FunctionDef) -> Set[str]:
+    """Parameters plus every name bound inside the function body."""
+    names = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                             + fn.args.kwonlyargs)}
+    for a in (fn.args.vararg, fn.args.kwarg):
+        if a is not None:
+            names.add(a.arg)
+    for stmt in _own_statements(fn):
+        targets: List[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.For)):
+            targets = [stmt.target]
+        elif isinstance(stmt, ast.With):
+            targets = [i.optional_vars for i in stmt.items
+                       if i.optional_vars is not None]
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            names.add(stmt.name)
+        for t in targets:
+            for node in ast.walk(t):
+                if isinstance(node, ast.Name):
+                    names.add(node.id)
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                 ast.GeneratorExp)):
+                for gen in node.generators:
+                    for n in ast.walk(gen.target):
+                        if isinstance(n, ast.Name):
+                            names.add(n.id)
+            elif isinstance(node, ast.NamedExpr):
+                names.add(node.target.id)
+    return names
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """Peel ``x[i].y`` chains down to the root ``Name``."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _stmt_exprs(stmt: ast.stmt) -> Iterator[ast.expr]:
+    """The statement's OWN expression children (child statements are
+    visited separately by ``_own_statements`` — walking them here would
+    double-report)."""
+    for _field, value in ast.iter_fields(stmt):
+        if isinstance(value, ast.expr):
+            yield value
+        elif isinstance(value, list):
+            for item in value:
+                if isinstance(item, ast.expr):
+                    yield item
+
+
+def _analyze_fn(path: str, fn: ast.FunctionDef
+                ) -> Iterator[Tuple[str, ast.AST, str]]:
+    """Yield (code, node, message) hazards for one traced function."""
+    env: Set[str] = set()
+    locals_ = _local_names(fn)
+
+    def note_assign(stmt: ast.stmt) -> None:
+        value = getattr(stmt, "value", None)
+        if value is None or not _tainted(value, env):
+            return
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for t in targets:
+            for node in ast.walk(t):
+                if isinstance(node, ast.Name):
+                    env.add(node.id)
+
+    for stmt in _own_statements(fn):
+        # RPA101 — Python control flow on a traced condition
+        if isinstance(stmt, (ast.If, ast.While)) \
+                and _tainted(stmt.test, env):
+            kind = "if" if isinstance(stmt, ast.If) else "while"
+            yield ("RPA101", stmt.test,
+                   f"Python `{kind}` on a traced value in "
+                   f"`{fn.name}` — use jnp.where/lax.cond (this "
+                   f"retraces or raises under jit)")
+        elif isinstance(stmt, ast.Assert) and _tainted(stmt.test, env):
+            yield ("RPA101", stmt.test,
+                   f"`assert` on a traced value in `{fn.name}` — "
+                   f"use checkify or a host-side precondition")
+
+        # RPA103 — assignment into closed-over state (the statement
+        # itself; mutator-method calls are caught in the expression walk)
+        if isinstance(stmt, (ast.Assign, ast.AugAssign)):
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for t in targets:
+                if isinstance(t, (ast.Subscript, ast.Attribute)):
+                    root = _root_name(t)
+                    if root is not None and root not in locals_:
+                        yield ("RPA103", t,
+                               f"traced `{fn.name}` writes into "
+                               f"closed-over `{root}` — mutation "
+                               f"happens once at trace time, not "
+                               f"per call")
+
+        exprs = [] if isinstance(stmt, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef,
+                                        ast.ClassDef)) else \
+            [n for e in _stmt_exprs(stmt) for n in ast.walk(e)]
+        for node in exprs:
+            # RPA102 — host sync / concretization
+            if isinstance(node, ast.Call):
+                fname = dotted_name(node.func) or ""
+                parts = fname.split(".")
+                args_tainted = any(_tainted(a, env) for a in node.args)
+                if parts[0] in CONCRETIZERS and len(parts) == 1 \
+                        and args_tainted:
+                    yield ("RPA102", node,
+                           f"`{fname}()` concretizes a traced value in "
+                           f"`{fn.name}` — forces a device sync and "
+                           f"bakes a trace-time constant")
+                elif parts[0] in HOST_ROOTS and args_tainted:
+                    yield ("RPA102", node,
+                           f"host `{fname}()` call on a traced value "
+                           f"in `{fn.name}` — move to jnp or hoist "
+                           f"out of the traced region")
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" \
+                        and _tainted(node.func.value, env):
+                    yield ("RPA102", node,
+                           f"`.item()` on a traced value in "
+                           f"`{fn.name}` — device sync inside "
+                           f"traced code")
+            # RPA103 — mutator-method call on closed-over state
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in MUTATORS:
+                root = _root_name(node.func.value)
+                if root is not None and root not in locals_:
+                    yield ("RPA103", node,
+                           f"traced `{fn.name}` calls "
+                           f"`.{node.func.attr}()` on closed-over "
+                           f"`{root}` — mutation happens once at "
+                           f"trace time, not per call")
+
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            note_assign(stmt)
+
+
+def _run_family(project: Project, want: str) -> List[Finding]:
+    from repro.analysis.registry import get_rule
+    rule = get_rule(want)
+    out: List[Finding] = []
+    for path, tree in project.walk():
+        for fn in traced_functions(path, tree):
+            for code, node, msg in _analyze_fn(path, fn):
+                if code != want:
+                    continue
+                out.append(Finding(code, rule.name, path,
+                                   getattr(node, "lineno", fn.lineno),
+                                   getattr(node, "col_offset", 0) + 1,
+                                   msg))
+    return out
+
+
+@register("RPA101", "traced-python-branch",
+          "Python if/while/assert on a traced value inside traced code")
+def rpa101(project: Project) -> List[Finding]:
+    return _run_family(project, "RPA101")
+
+
+@register("RPA102", "traced-host-sync",
+          "float()/int()/np.*/.item() concretizing a traced value")
+def rpa102(project: Project) -> List[Finding]:
+    return _run_family(project, "RPA102")
+
+
+@register("RPA103", "traced-closure-mutation",
+          "traced function mutates closed-over Python state")
+def rpa103(project: Project) -> List[Finding]:
+    return _run_family(project, "RPA103")

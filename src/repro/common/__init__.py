@@ -1,13 +1,8 @@
-from repro.common.config import (  # noqa: F401
-    HW,
-    HWConfig,
-    MLAConfig,
-    MoEConfig,
-    ModelConfig,
-    SHAPES,
-    ShapeConfig,
-    SSMConfig,
-    XLSTMConfig,
-    pad_to,
-    shape_applicable,
-)
+"""Shared infrastructure used across the battery system.
+
+Only ``repro.common.compat`` (JAX version shims) is live; the growth
+seed's LM model-config layer lives in ``repro.common.config`` and is
+imported directly by its remaining consumers rather than re-exported
+here — an eager re-export would drag the quarantined LM stack into the
+battery import graph (see DESIGN.md §9 on the RPA501 reachability rule).
+"""

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Configuration dataclasses for CondorJAX.
 
 ``ModelConfig`` is the single source of truth for every assigned architecture;

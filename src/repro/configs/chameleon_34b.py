@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """chameleon-34b [arXiv:2405.09818].
 
 48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536; early-fusion VQ image

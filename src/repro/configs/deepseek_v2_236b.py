@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """deepseek-v2-236b [arXiv:2405.04434].
 
 60L d_model=5120 128H, MLA (kv_lora=512, q_lora=1536, rope dim 64),

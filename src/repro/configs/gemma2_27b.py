@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """gemma2-27b [arXiv:2408.00118].
 
 46L d_model=4608 32H (GQA kv=16, head_dim=128) d_ff=36864 (GeGLU)

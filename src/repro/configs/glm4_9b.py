@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """glm4-9b [hf:THUDM/glm-4-9b]. 40L d4096 32H (GQA kv=2) d_ff=13696 vocab=151552."""
 from repro.common.config import ModelConfig
 

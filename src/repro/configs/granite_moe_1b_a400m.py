@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base].
 
 24L d_model=1024 16H (GQA kv=8) vocab=49155, MoE 32 experts top-8,

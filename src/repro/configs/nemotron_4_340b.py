@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """nemotron-4-340b [arXiv:2402.16819].
 
 96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000; squared-ReLU

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """whisper-small [arXiv:2212.04356].
 
 Enc-dec, 12+12L d_model=768 12H (MHA kv=12) d_ff=3072 (plain GELU)

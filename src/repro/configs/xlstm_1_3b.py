@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """xlstm-1.3b [arXiv:2405.04517].
 
 48 blocks d_model=2048, 4 heads, mLSTM:sLSTM = 7:1 (xLSTM[7:1]), no separate

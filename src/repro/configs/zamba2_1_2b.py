@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model configs; nothing in the battery system reads them
 """zamba2-1.2b [arXiv:2411.15242].
 
 38 Mamba-2 layers d_model=2048 (ssm_state=64) + ONE shared attention(+MLP)

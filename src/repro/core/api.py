@@ -108,14 +108,14 @@ class RunSpec:
     continuable) generators; ``mwc`` has no jump-ahead and is refused."""
     battery: str
     generators: Union[str, Tuple[str, ...]] = ("splitmix64",)
-    seeds: Union[int, Tuple[int, ...]] = (0,)
+    seeds: Union[int, Tuple[int, ...]] = (0,)  # repro: runtime-arg
     scale: float = 1.0
     policy: Union[str, SchedulePolicy] = "lpt"
-    retry: RetryPolicy = RetryPolicy()
-    checkpoint_path: Optional[str] = None
-    progress: bool = False
-    alpha: float = 0.01
-    stop_on_verdict: bool = False
+    retry: RetryPolicy = RetryPolicy()  # repro: runtime-arg
+    checkpoint_path: Optional[str] = None  # repro: runtime-arg
+    progress: bool = False  # repro: runtime-arg
+    alpha: float = 0.01  # repro: runtime-arg
+    stop_on_verdict: bool = False  # repro: runtime-arg
     backend: str = "auto"
     offsets: Optional[Union[int, Tuple[int, ...]]] = None
 

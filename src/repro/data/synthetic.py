@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Deterministic synthetic token pipeline.
 
 Stream is keyed by (seed, step) via threefry — restart-exact: resuming from

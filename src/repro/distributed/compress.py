@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed sharding/elastic LM utilities; the battery pool has its own mesh layer
 """Int8 gradient compression for cross-pod DP all-reduce.
 
 At 2+ pods the DP gradient reduction crosses the (slow) inter-pod links;

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed sharding/elastic LM utilities; the battery pool has its own mesh layer
 """Activation sharding constraints (mesh-context aware, no-op without mesh).
 
 GSPMD sharding propagation can drop the batch sharding inside while-loop

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed sharding/elastic LM utilities; the battery pool has its own mesh layer
 """Elastic re-meshing for the battery pool.
 
 The paper's war story (§7.4): machines vanish mid-project (re-imaged lab

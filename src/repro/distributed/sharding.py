@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed sharding/elastic LM utilities; the battery pool has its own mesh layer
 """Logical-axis -> mesh-axis resolution (GSPMD named sharding rules).
 
 Parallelism mapping (see DESIGN.md §5):

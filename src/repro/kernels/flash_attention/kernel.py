@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed attention kernel demo; unrelated to the TestU01 battery kernels
 """Pallas TPU kernel: blocked causal flash attention (fwd, online softmax).
 
 Hardware twin of models/attention.py::_attend_blocked (same math, same

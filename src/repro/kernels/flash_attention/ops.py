@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed attention kernel demo; unrelated to the TestU01 battery kernels
 """jit'd public wrapper: (B, S, H, dh) layout + GQA head grouping.
 
 ``interpret="auto"`` (the default) compiles the Pallas kernel on real TPU

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed attention kernel demo; unrelated to the TestU01 battery kernels
 """Pure-jnp oracle for flash_attention."""
 import jax.numpy as jnp
 

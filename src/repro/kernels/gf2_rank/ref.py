@@ -1,3 +1,4 @@
+# repro: noqa RPA501 -- reference oracle: reached from tests/benchmarks, not the runtime roots
 """Pure-jnp oracle for gf2_rank (the battery's own implementation)."""
 from repro.stats.tests import gf2_rank32
 

@@ -40,6 +40,7 @@ def histogram(idx: jax.Array, k: int, interpret: bool = True) -> jax.Array:
         _hist_kernel,
         grid=(n // CHUNK,),
         in_specs=[pl.BlockSpec((CHUNK,), lambda i: (i,))],
+        # repro: vmem-bound repro.stats.backends.HIST_MAX_BINS
         out_specs=pl.BlockSpec((k,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
         interpret=interpret,

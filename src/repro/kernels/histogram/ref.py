@@ -1,3 +1,4 @@
+# repro: noqa RPA501 -- reference oracle: reached from tests/benchmarks, not the runtime roots
 """Pure-jnp oracle for the histogram kernel."""
 import jax.numpy as jnp
 

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # The two lines above MUST run before any other import (jax locks the device

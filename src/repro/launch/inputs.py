@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
 """Abstract input specs (ShapeDtypeStruct + NamedSharding) per (arch, shape).
 
 The same pattern shannon/kernels uses: weak-type-correct, shardable, zero

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
 """Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
 
     PYTHONPATH=src python -m repro.launch.report > artifacts/roofline.md

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
 """Roofline analysis from compiled dry-run artifacts.
 
 Three terms per (arch × shape × mesh), in seconds (TPU v5e-class constants

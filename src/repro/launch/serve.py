@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
 """Serving driver: batched prefill + greedy decode loop."""
 from __future__ import annotations
 

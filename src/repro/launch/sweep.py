@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
 """Dry-run sweep driver: every (arch × shape × mesh) cell as a subprocess.
 
 Each cell runs in its own process (jax device-count env is per-process) with

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
 """Training driver: ``python -m repro.launch.train --arch qwen2-1.5b
 --reduced --steps 50``.
 

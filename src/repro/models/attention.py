@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Attention: GQA (w/ local windows, softcaps, qk-norm, bias) and MLA.
 
 Two compute paths:

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Shared model primitives: norms, activations, rope, dense helpers."""
 from __future__ import annotations
 

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Prefill + single-token decode for every architecture family.
 
 ``prefill(params, tokens, cfg, max_seq)`` runs the full-sequence forward

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Dense MLP (gated SwiGLU/GeGLU or plain squared-ReLU/GELU)."""
 from __future__ import annotations
 

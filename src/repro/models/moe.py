@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Mixture-of-Experts layer (GShard-style dense dispatch, EP over 'model').
 
 Capacity-based top-k routing with one-hot dispatch/combine einsums — the

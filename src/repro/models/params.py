@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Parameter-spec machinery.
 
 Every module declares its parameters once as a ``Spec`` tree of ``P`` entries

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Mamba-2 (SSD) block — chunkwise-parallel train/prefill + O(1) decode.
 
 Faithful to the SSD formulation [arXiv:2405.21060]: scalar-per-head decay

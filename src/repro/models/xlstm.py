@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
 and sLSTM (scalar memory, true recurrence via lax.scan).
 

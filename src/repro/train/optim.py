@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """AdamW + schedules, implemented directly in JAX (no optax dependency).
 
 Optimizer state is a pytree parallel to params (sharded identically — the

@@ -1,3 +1,4 @@
+# repro: quarantine -- growth-seed LM model stack; exercised only by the seed tier-1 tests
 """Train-step builder: gradient accumulation + AdamW, pjit-ready.
 
 ``make_train_step(cfg, oc)`` returns ``train_step(state, batch)`` where

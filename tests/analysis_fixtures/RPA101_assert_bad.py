@@ -1,0 +1,10 @@
+"""BAD: `assert` on a traced value inside a jitted function."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def checked_total(x):
+    total = jnp.sum(x.astype(jnp.float32))
+    assert total >= 0.0, "negative mass"
+    return total

@@ -1,0 +1,11 @@
+"""BAD: Python `if` on a traced value inside a jitted function."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clipped_mean(x):
+    m = jnp.mean(x)
+    if m > 0.0:
+        return m
+    return -m

@@ -1,0 +1,9 @@
+"""BAD: float() concretizes a traced value (device sync + baked const)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def scale_of(x):
+    s = jnp.std(x)
+    return x / float(s)

@@ -1,0 +1,14 @@
+"""GOOD (by suppression): an intentional trace-time concretization.
+
+The float() below is deliberate — the operand is a compile-time
+constant under this fixture's contract — and carries the analyzer's
+inline suppression, so the file reports no findings.
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def baked(x):
+    c = float(jnp.pi * jnp.asarray(2.0))  # repro: noqa RPA102
+    return x * c

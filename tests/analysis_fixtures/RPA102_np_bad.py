@@ -1,0 +1,10 @@
+"""BAD: host numpy called on a traced value inside traced code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def host_round_trip(x):
+    y = jnp.cumsum(x)
+    return np.asarray(y)

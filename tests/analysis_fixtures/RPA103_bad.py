@@ -1,0 +1,11 @@
+"""BAD: a jitted function appends to module state at trace time."""
+import jax
+import jax.numpy as jnp
+
+_TRACE_LOG = []
+
+
+@jax.jit
+def logged_sum(x):
+    _TRACE_LOG.append(x.shape)
+    return jnp.sum(x.astype(jnp.float32))

@@ -1,0 +1,11 @@
+"""GOOD: locals may accumulate freely inside a traced function."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def stacked(x):
+    parts = []
+    for i in range(3):  # static python loop: unrolled at trace time
+        parts.append(x + i)
+    return jnp.stack(parts)

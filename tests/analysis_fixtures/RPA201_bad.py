@@ -1,0 +1,21 @@
+"""BAD: _compiled reads spec.backend but the cache key omits it —
+the PR 4 resolved-backend bug class."""
+
+
+class Session:
+    def __init__(self):
+        self._cache = {}
+
+    def cache_key(self, spec):
+        return (spec.battery, float(spec.scale))
+
+    def _compiled(self, spec):
+        key = self.cache_key(spec)
+        if key not in self._cache:
+            self._cache[key] = build(spec.battery, spec.scale,
+                                     backend=spec.backend)
+        return self._cache[key]
+
+
+def build(battery, scale, backend):
+    return (battery, scale, backend)

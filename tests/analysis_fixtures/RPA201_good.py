@@ -1,0 +1,25 @@
+"""GOOD: every field compiled-program construction reads is keyed."""
+
+
+class Session:
+    def __init__(self):
+        self._cache = {}
+
+    def cache_key(self, spec):
+        resolved = resolve(spec.backend)
+        return (spec.battery, float(spec.scale), resolved)
+
+    def _compiled(self, spec):
+        key = self.cache_key(spec)
+        if key not in self._cache:
+            self._cache[key] = build(spec.battery, spec.scale,
+                                     backend=resolve(spec.backend))
+        return self._cache[key]
+
+
+def resolve(backend):
+    return backend
+
+
+def build(battery, scale, backend):
+    return (battery, scale, backend)

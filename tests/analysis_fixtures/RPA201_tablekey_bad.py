@@ -1,0 +1,17 @@
+"""BAD: the session cache key drops a field the table key depends on —
+two sessions with different compiled tables would alias."""
+
+
+class Session:
+    def cache_key(self, spec):
+        return (spec.battery,)
+
+    def _table_key(self, spec):
+        return (spec.battery, spec.backend)
+
+    def _compiled(self, spec):
+        return compile_table(spec.battery, spec.backend)
+
+
+def compile_table(battery, backend):
+    return (battery, backend)

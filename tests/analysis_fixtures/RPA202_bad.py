@@ -1,0 +1,20 @@
+"""BAD: a RunSpec field is neither keyed nor classified runtime-arg."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    battery: str
+    fancy_mode: str = "off"
+
+
+class Session:
+    def cache_key(self, spec):
+        return (spec.battery,)
+
+    def _compiled(self, spec):
+        return compile_battery(spec.battery)
+
+
+def compile_battery(battery):
+    return battery

@@ -1,0 +1,20 @@
+"""GOOD: every RunSpec field is keyed or explicitly runtime-arg."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    battery: str
+    progress: bool = False  # repro: runtime-arg
+
+
+class Session:
+    def cache_key(self, spec):
+        return (spec.battery,)
+
+    def _compiled(self, spec):
+        return compile_battery(spec.battery)
+
+
+def compile_battery(battery):
+    return battery

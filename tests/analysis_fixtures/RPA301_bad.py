@@ -1,0 +1,21 @@
+"""BAD: an accelerated kernel family with no reference fallback."""
+
+
+def gap_ref(bits):
+    return bits
+
+
+def foo_fast(bits):
+    return bits
+
+
+KERNELS = {"gap": gap_ref}
+
+for _k, _fn in KERNELS.items():
+    register(_k, "reference", _fn)
+
+register("foo", "accelerated", foo_fast)
+
+
+def register(name, backend, fn):
+    pass

@@ -1,0 +1,8 @@
+"""BAD: unpinned integer reduction in a Pallas kernel body — under
+ambient x64 the accumulator promotes to int64 (the gf2_rank bug)."""
+import jax.numpy as jnp
+
+
+def _popcount_kernel(rows_ref, out_ref):
+    rows = rows_ref[...]
+    out_ref[...] = jnp.sum(rows & jnp.uint32(1), axis=1)

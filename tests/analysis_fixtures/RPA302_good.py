@@ -1,0 +1,10 @@
+"""GOOD: integer reductions pinned, float reductions tracked."""
+import jax.numpy as jnp
+
+
+def _pinned_kernel(rows_ref, out_ref, acc_ref):
+    rows = rows_ref[...]
+    out_ref[...] = jnp.sum(rows & jnp.uint32(1), axis=1,
+                           dtype=jnp.uint32)
+    hits = (rows > 0).astype(jnp.float32)
+    acc_ref[...] = jnp.sum(hits, axis=1)

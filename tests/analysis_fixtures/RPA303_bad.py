@@ -1,0 +1,20 @@
+"""BAD: block working set far over the VMEM budget."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def big_copy(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(x.shape[0] // TILE,),
+        in_specs=[pl.BlockSpec((TILE, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)

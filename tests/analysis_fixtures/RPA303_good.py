@@ -1,0 +1,21 @@
+"""GOOD: small literal blocks; symbolic dim carries a vmem-bound."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 256
+MAX_BINS = 1 << 12
+
+
+def _count_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def counts(x, k):
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(x.shape[0] // CHUNK,),
+        in_specs=[pl.BlockSpec((CHUNK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),  # repro: vmem-bound 4096
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+    )(x)

@@ -1,0 +1,20 @@
+"""BAD: a symbolic block dimension with no static bound annotation."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 256
+
+
+def _count_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def counts(x, k):
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(x.shape[0] // CHUNK,),
+        in_specs=[pl.BlockSpec((CHUNK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+    )(x)

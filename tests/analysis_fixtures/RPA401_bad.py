@@ -1,0 +1,14 @@
+"""BAD: a generator declared COUNTER_BASED takes no offset param —
+jump-ahead would silently restart its stream."""
+
+
+def a_block(seed, stream, n, offset=0):
+    return (seed, stream, n, offset)
+
+
+def b_block(seed, stream, n):
+    return (seed, stream, n)
+
+
+GENERATORS = {"a": a_block, "b": b_block}
+COUNTER_BASED = ("a", "b")

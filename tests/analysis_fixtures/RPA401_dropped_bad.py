@@ -1,0 +1,14 @@
+"""BAD: a generator takes offset= but is missing from COUNTER_BASED —
+its jump-ahead capability is dropped at the offset dispatch."""
+
+
+def a_block(seed, stream, n, offset=0):
+    return (seed, stream, n, offset)
+
+
+def b_block(seed, stream, n, offset=0):
+    return (seed, stream, n, offset)
+
+
+GENERATORS = {"a": a_block, "b": b_block}
+COUNTER_BASED = ("a",)

@@ -1,0 +1,13 @@
+"""GOOD: COUNTER_BASED exactly matches the offset-taking signatures."""
+
+
+def a_block(seed, stream, n, offset=0):
+    return (seed, stream, n, offset)
+
+
+def m_block(seed, stream, n):
+    return (seed, stream, n)
+
+
+GENERATORS = {"a": a_block, "m": m_block}
+COUNTER_BASED = ("a",)

@@ -1,0 +1,21 @@
+"""BAD: the writer's leaf layout has no reader upgrade path."""
+import numpy as np
+
+from repro.ckpt import io
+
+
+class Snapshot:
+    def __init__(self, done=0, total=0):
+        self.done = done
+        self.total = total
+
+    def save(self, path):
+        io.save(path, [np.int64(self.done), np.int64(self.total),
+                       np.int64(0), np.int64(0), np.int64(0)])
+
+    @classmethod
+    def load(cls, path):
+        leaves = io.load_flat(path)
+        if len(leaves) == 3:
+            return cls(int(leaves[0]), int(leaves[1]))
+        raise ValueError("unknown snapshot layout")

@@ -1,0 +1,26 @@
+"""GOOD: writer layout accepted, version checked, legacy upgraded."""
+import numpy as np
+
+from repro.ckpt import io
+
+SNAP_VERSION = 2
+
+
+class Snapshot:
+    def __init__(self, done=0):
+        self.done = done
+
+    def save(self, path):
+        io.save(path, [np.int64(SNAP_VERSION), np.int64(self.done)])
+
+    @classmethod
+    def load(cls, path):
+        leaves = io.load_flat(path)
+        if len(leaves) == 1:  # v1: bare counter
+            return cls(int(leaves[0]))
+        if len(leaves) != 2:
+            raise ValueError("unknown snapshot layout")
+        ver = int(leaves[0])
+        if ver != SNAP_VERSION:
+            raise ValueError(f"snapshot version {ver}")
+        return cls(int(leaves[1]))

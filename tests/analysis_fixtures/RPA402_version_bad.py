@@ -1,0 +1,21 @@
+"""BAD: a serialized version constant the reader never checks."""
+import numpy as np
+
+from repro.ckpt import io
+
+SNAP_VERSION = 2
+
+
+class Snapshot:
+    def __init__(self, done=0):
+        self.done = done
+
+    def save(self, path):
+        io.save(path, [np.int64(SNAP_VERSION), np.int64(self.done)])
+
+    @classmethod
+    def load(cls, path):
+        leaves = io.load_flat(path)
+        if len(leaves) != 2:
+            raise ValueError("unknown snapshot layout")
+        return cls(int(leaves[1]))

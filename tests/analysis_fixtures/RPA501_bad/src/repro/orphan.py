@@ -1,0 +1,3 @@
+"""An unreachable module with no quarantine annotation."""
+
+LEFTOVER = 1

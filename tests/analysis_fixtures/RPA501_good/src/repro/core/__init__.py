@@ -1,0 +1,1 @@
+"""Battery-system root for the reachability fixture."""

@@ -1,0 +1,4 @@
+# repro: quarantine -- dead fixture module, kept on purpose
+"""An unreachable module, properly annotated."""
+
+LEFTOVER = 1

@@ -1,0 +1,2 @@
+"""Battery-system root for the reachability fixture."""
+from repro import helper  # noqa: F401

@@ -1,0 +1,4 @@
+# repro: quarantine -- allegedly dead (but the root imports it)
+"""A quarantined module that live code still imports."""
+
+HELPS = True

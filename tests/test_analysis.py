@@ -1,0 +1,212 @@
+"""The static-analysis suite (DESIGN.md §9): fixture corpus, repo
+self-check, and the cache-key mutation test.
+
+Three layers, mirroring how the analyzer is meant to be trusted:
+
+  1. every bad fixture in tests/analysis_fixtures/ fires EXACTLY its
+     intended rule code, and every good fixture fires nothing — the
+     rules have both the sensitivity and the specificity they claim;
+  2. the real repo tree is clean modulo the (empty) baseline — the CI
+     gate's exit-0 is reproduced in-process;
+  3. mutation tests: re-introducing the PR 4 resolved-backend bug
+     (dropping ``backend`` from the session trace-cache key) makes
+     RPA201 fire, so that bug class is mechanically non-reintroducible.
+
+The analysis package is stdlib-only, so none of this imports jax.
+"""
+import os
+import re
+
+import pytest
+
+from repro.analysis import Baseline, Project, run_analysis
+from repro.analysis.registry import rules
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "analysis_fixtures")
+
+# single-file fixtures are mounted here: a src path (so module-name
+# mapping works) outside every known-traced module prefix
+MOUNT = "src/repro/fixtures/snippet.py"
+
+
+def _fixture_files():
+    return sorted(f for f in os.listdir(FIXTURES) if f.endswith(".py"))
+
+
+def _fixture_trees():
+    return sorted(d for d in os.listdir(FIXTURES)
+                  if os.path.isdir(os.path.join(FIXTURES, d)))
+
+
+def _project_for(name):
+    """Mount a fixture as a virtual Project (same path the CLI runs)."""
+    full = os.path.join(FIXTURES, name)
+    if os.path.isdir(full):
+        files = {}
+        for dirpath, _dirs, fnames in os.walk(full):
+            for fname in fnames:
+                fpath = os.path.join(dirpath, fname)
+                rel = os.path.relpath(fpath, full).replace(os.sep, "/")
+                with open(fpath, encoding="utf-8") as f:
+                    files[rel] = f.read()
+        return Project(files)
+    with open(full, encoding="utf-8") as f:
+        return Project({MOUNT: f.read()})
+
+
+def _codes(name):
+    result = run_analysis(_project_for(name))
+    assert not result.syntax_errors, f"{name} does not parse"
+    return sorted({f.code for f in result.findings})
+
+
+def _intended(name):
+    m = re.match(r"(RPA\d{3})_", name)
+    assert m, f"fixture {name!r} must be named RPAnnn_*"
+    return m.group(1)
+
+
+BAD = [n for n in _fixture_files() + _fixture_trees() if "_bad" in n]
+GOOD = [n for n in _fixture_files() + _fixture_trees() if "_good" in n]
+
+
+def test_corpus_shape():
+    """ISSUE 6 acceptance: >= 10 bad fixtures across >= 4 families."""
+    assert len(BAD) >= 10, BAD
+    families = {_intended(n)[:4] for n in BAD}
+    assert len(families) >= 4, families
+    assert BAD and GOOD
+    # every fixture name references a registered rule code
+    known = {r.code for r in rules()}
+    for n in BAD + GOOD:
+        assert _intended(n) in known, n
+
+
+@pytest.mark.parametrize("name", [n for n in _fixture_files()
+                                  + _fixture_trees() if "_bad" in n])
+def test_bad_fixture_fires_exactly_its_code(name):
+    assert _codes(name) == [_intended(name)], name
+
+
+@pytest.mark.parametrize("name", [n for n in _fixture_files()
+                                  + _fixture_trees() if "_good" in n])
+def test_good_fixture_is_clean(name):
+    assert _codes(name) == [], name
+
+
+def test_noqa_fixture_is_suppressed_not_silent():
+    """The RPA102 noqa fixture would fire without its suppression."""
+    result = run_analysis(_project_for("RPA102_noqa_good.py"))
+    assert [f.code for f in result.suppressed] == ["RPA102"]
+    src = _project_for("RPA102_noqa_good.py").source(MOUNT)
+    stripped = src.replace("  # repro: noqa RPA102", "")
+    bare = run_analysis(Project({MOUNT: stripped}))
+    assert [f.code for f in bare.findings] == ["RPA102"]
+
+
+# ---------------------------------------------------------------------------
+# repo self-check: the tree the CI gate sees is clean modulo the baseline
+
+def test_repo_tree_is_clean_modulo_baseline():
+    project = Project.from_tree(REPO)
+    baseline = Baseline.load(
+        os.path.join(REPO, ".repro-analysis-baseline.json"))
+    result = run_analysis(project, baseline)
+    assert result.files_scanned > 50
+    assert not result.syntax_errors, result.syntax_errors
+    assert result.findings == [], "\n".join(
+        str(f) for f in result.findings)
+    # strict gate: the shipped baseline is empty and must stay that way
+    assert result.clean(strict=True), result.stale_baseline
+
+
+def test_repo_suppressions_are_the_known_oracles():
+    """Inline suppressions on the real tree are enumerated here, so a
+    new one is a conscious decision with a test diff."""
+    project = Project.from_tree(REPO)
+    result = run_analysis(project)
+    suppressed = sorted((f.code, f.path) for f in result.suppressed)
+    assert suppressed == [
+        ("RPA501", "src/repro/kernels/gf2_rank/ref.py"),
+        ("RPA501", "src/repro/kernels/histogram/ref.py"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# mutation tests: the analyzer catches the bug classes it was built for
+
+def _api_source():
+    with open(os.path.join(REPO, "src/repro/core/api.py"),
+              encoding="utf-8") as f:
+        return f.read()
+
+
+def _mutated_project(old, new):
+    src = _api_source()
+    assert old in src, "mutation anchor drifted — update this test"
+    project = Project.from_tree(REPO)
+    files = dict(project.files)
+    files["src/repro/core/api.py"] = src.replace(old, new)
+    return Project(files)
+
+
+def test_mutation_dropping_backend_from_cache_key_fires_rpa201():
+    """ISSUE 6 acceptance: deleting ``backend`` from the session
+    trace-cache key re-introduces the PR 4 bug — RPA201 must fire."""
+    project = _mutated_project(
+        "policy.signature(), kernel_backends.resolve(spec.backend))",
+        "policy.signature())")
+    result = run_analysis(project, codes=["RPA201"])
+    hits = [f for f in result.findings if f.code == "RPA201"
+            and f.path == "src/repro/core/api.py"]
+    assert hits, "RPA201 did not catch the dropped backend key field"
+    assert any("backend" in f.message for f in hits)
+
+
+def test_mutation_unclassified_runspec_field_fires_rpa202():
+    """Removing a runtime-arg classification resurfaces RPA202."""
+    project = _mutated_project("alpha: float = 0.01  # repro: runtime-arg",
+                               "alpha: float = 0.01")
+    result = run_analysis(project, codes=["RPA202"])
+    assert any(f.code == "RPA202" and "alpha" in f.message
+               for f in result.findings)
+
+
+def test_mutation_unquarantined_seed_module_fires_rpa501():
+    """Stripping a quarantine annotation resurfaces RPA501."""
+    project = Project.from_tree(REPO)
+    files = dict(project.files)
+    path = "src/repro/models/lm.py"
+    head, _, rest = files[path].partition("\n")
+    assert "repro: quarantine" in head
+    files[path] = rest
+    result = run_analysis(Project(files), codes=["RPA501"])
+    assert any(f.path == path for f in result.findings)
+
+
+def test_baseline_grandfathers_then_goes_stale():
+    """Baseline lifecycle on a virtual project: a baselined finding is
+    not actionable; fixing it strands a stale entry that --strict
+    rejects (the baseline may only shrink)."""
+    with open(os.path.join(FIXTURES, "RPA401_bad.py"),
+              encoding="utf-8") as f:
+        bad = f.read()
+    project = Project({MOUNT: bad})
+    first = run_analysis(project)
+    assert len(first.findings) == 1
+    baseline = Baseline({f.key() for f in first.findings})
+    grandfathered = run_analysis(project, baseline)
+    assert grandfathered.findings == []
+    assert len(grandfathered.baselined) == 1
+    assert grandfathered.clean(strict=True)
+    # "fix" the finding: the stale entry now fails strict mode only
+    with open(os.path.join(FIXTURES, "RPA401_good.py"),
+              encoding="utf-8") as f:
+        good = f.read()
+    fixed = run_analysis(Project({MOUNT: good}), baseline)
+    assert fixed.findings == []
+    assert len(fixed.stale_baseline) == 1
+    assert fixed.clean(strict=False)
+    assert not fixed.clean(strict=True)

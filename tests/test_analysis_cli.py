@@ -1,0 +1,105 @@
+"""Golden-key tests for ``python -m repro.analysis --json`` — the
+machine-readable contract the CI static-analysis gate and any
+downstream dashboards consume (same discipline as tests/test_cli_json.py
+for the battery CLI). Keys are append-only: renaming or dropping one
+fails here before any consumer rots."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TOP_KEYS = {"version", "strict", "clean", "files_scanned", "rules",
+            "findings", "baselined", "suppressed", "stale_baseline",
+            "counts"}
+RULE_KEYS = {"code", "name", "summary"}
+FINDING_KEYS = {"code", "rule", "path", "line", "col", "message"}
+COUNT_KEYS = {"findings", "baselined", "suppressed", "stale_baseline",
+              "by_code"}
+
+
+def _cli(json_path, *args):
+    env = dict(os.environ, PYTHONPATH="src")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "--json", json_path, *args],
+        env=env, cwd=REPO, capture_output=True, text=True)
+    assert os.path.exists(json_path), (
+        f"analyzer wrote no json report (exit {p.returncode}):\n"
+        f"{p.stdout[-2000:]}\n{p.stderr[-2000:]}")
+    with open(json_path) as f:
+        return p.returncode, json.load(f)
+
+
+@pytest.fixture(scope="module")
+def strict_report(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("analysis") / "report.json")
+    return _cli(path, "--strict")
+
+
+def test_strict_gate_is_clean(strict_report):
+    """ISSUE 6 acceptance: the CI gate exits 0 on the repo tree."""
+    code, rep = strict_report
+    assert code == 0, rep.get("findings")
+    assert rep["clean"] is True
+    assert rep["strict"] is True
+    assert rep["findings"] == []
+    assert rep["stale_baseline"] == []
+
+
+def test_json_golden_keys(strict_report):
+    _, rep = strict_report
+    assert set(rep) == TOP_KEYS
+    assert rep["version"] == 1
+    assert rep["files_scanned"] > 50
+    for rule in rep["rules"]:
+        assert set(rule) == RULE_KEYS
+    for finding in (rep["findings"] + rep["baselined"]
+                    + rep["suppressed"]):
+        assert set(finding) == FINDING_KEYS
+    assert set(rep["counts"]) == COUNT_KEYS
+
+
+def test_rule_catalog_covers_the_families(strict_report):
+    """>= 4 rule families ship, with stable codes."""
+    _, rep = strict_report
+    codes = [r["code"] for r in rep["rules"]]
+    assert codes == sorted(codes)
+    families = {c[:4] for c in codes}
+    assert {"RPA1", "RPA2", "RPA3", "RPA4", "RPA5"} <= families
+    # the load-bearing codes this PR documents must exist by name
+    by_code = {r["code"]: r["name"] for r in rep["rules"]}
+    assert by_code["RPA101"] == "traced-python-branch"
+    assert by_code["RPA201"] == "cache-key-missing-field"
+    assert by_code["RPA303"] == "vmem-budget"
+    assert by_code["RPA501"] == "unreachable-module"
+
+
+def test_suppressed_oracle_findings_are_reported(strict_report):
+    """Suppressions stay visible in the machine report (not silently
+    swallowed): the two ref-oracle RPA501s."""
+    _, rep = strict_report
+    sup = {(f["code"], f["path"]) for f in rep["suppressed"]}
+    assert sup == {
+        ("RPA501", "src/repro/kernels/gf2_rank/ref.py"),
+        ("RPA501", "src/repro/kernels/histogram/ref.py"),
+    }
+    assert rep["counts"]["suppressed"] == 2
+
+
+def test_list_rules_and_exit_codes(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        env=env, cwd=REPO, capture_output=True, text=True)
+    assert p.returncode == 0
+    assert "RPA101" in p.stdout and "RPA501" in p.stdout
+    # a bogus root is a usage error, not a crash or a false pass
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root",
+         str(tmp_path)],
+        env=env, cwd=REPO, capture_output=True, text=True)
+    assert p.returncode == 2
