@@ -15,7 +15,10 @@ directions:
           quarantined territory); the import edge is named.
 
 Roots: ``repro.core`` (the session/battery engine), the
-``repro.launch.battery`` CLI, and ``repro.analysis`` itself. Reaching a
+``repro.launch.battery`` CLI, the serve layer (``repro.serve`` and its
+``repro.launch.serve`` daemon CLI), and ``repro.analysis`` itself —
+the serve daemon is an entry point like the battery CLI, so its
+subtree must stay honestly classified too. Reaching a
 module also reaches its ancestor package ``__init__``s (importing
 ``repro.a.b`` executes ``repro/a/__init__``). The family no-ops on
 projects that contain no root module, so single-file fixture trees
@@ -32,7 +35,8 @@ from repro.analysis.registry import register
 
 # a module is a root when its dotted name equals one of these or sits
 # under one of them
-ROOT_PREFIXES = ("repro.core", "repro.launch.battery", "repro.analysis")
+ROOT_PREFIXES = ("repro.core", "repro.launch.battery", "repro.serve",
+                 "repro.launch.serve", "repro.analysis")
 
 
 def _is_root(module: str) -> bool:

@@ -679,6 +679,7 @@ class BatteryRun:
         self._t0 = time.time()
         self.rounds_run = 0
         self.retries = 0
+        self.driver_retries = 0
         self.plan_rounds = 0
         self.cancelled = False
         G = spec.n_generators
@@ -803,6 +804,15 @@ class BatteryRun:
         return {gen: self._verdicts[g]
                 for g, gen in enumerate(self.spec.generators)}
 
+    def results_by_position(self) -> List[Dict[int, tuple]]:
+        """Combined TEST-space results per generator POSITION in the spec
+        (sub-job groups folded back through the policy's combiner). The
+        positional twin of ``verdicts_by_position`` — what the serve
+        layer's demux slices a coalesced dispatch's results out of."""
+        return [stitch.fold_groups(self._results[g], self._compiled.jobs,
+                                   self._compiled.combine)
+                for g in range(self.spec.n_generators)]
+
     def verdicts_by_position(self) -> List[stitch.Verdict]:
         """Interim verdicts indexed by generator POSITION in the spec.
         ``verdict()`` keys by name, which collapses a spec whose
@@ -868,7 +878,14 @@ class BatteryRun:
                       f"{dropped} pending round(s) cancelled", flush=True)
 
     def release(self) -> int:
-        """condor_release: replan the HELD set. Returns #jobs released."""
+        """condor_release: replan the HELD set. Returns #jobs released.
+
+        A manual release is FREE with respect to the ``RetryPolicy``
+        budget: ``retries`` counts every release pass (reporting truth),
+        but the driver's own hold/release loop budgets against the
+        separate ``driver_retries`` counter — a user who released once
+        by hand does not get fewer automatic retries from ``result()``
+        or ``stream()``."""
         h = self.held()
         if not h:
             return 0
@@ -878,29 +895,63 @@ class BatteryRun:
             print(f"  {len(h)} held tests released for retry")
         return len(h)
 
+    def _driver_release(self) -> int:
+        """A release initiated by the drive loop itself — the only kind
+        that spends the ``RetryPolicy`` budget."""
+        self.driver_retries += 1
+        return self.release()
+
+    def drive(self, stop_when=None) -> "BatteryRun":
+        """The hold/release drive loop shared by ``result()``,
+        ``stream()`` and the campaign phase driver: dispatch every queued
+        round, then release-and-retry the HELD set until it clears or
+        the ``RetryPolicy`` budget (driver-initiated releases only) is
+        spent. ``stop_when`` is an optional ``handle -> bool`` predicate
+        checked after every round; when it fires the remaining rounds
+        are cancelled (the campaign uses it to stop a phase the moment
+        every real cell's verdict is decided). Returns ``self``."""
+        while True:
+            while self._queue:
+                self.poll()
+                if stop_when is not None and stop_when(self):
+                    self.cancel()
+                    break
+            if self.done or self.cancelled:
+                break
+            if (not self.held()
+                    or self.driver_retries >= self.spec.retry.max_retries):
+                break
+            self._driver_release()
+        return self
+
     def stream(self) -> Iterator[dict]:
-        """Yield one status per round until the current plan drains."""
-        while self._queue:
-            yield self.poll()
+        """Yield one status per round until the run completes — INCLUDING
+        hold/release retry rounds, exactly like ``result()``'s drive
+        loop, so a streaming client sees the retries instead of the
+        stream ending silently while jobs are still HELD."""
+        while True:
+            while self._queue:
+                yield self.poll()
+            if (self.done or self.cancelled or not self.held()
+                    or self.driver_retries >= self.spec.retry.max_retries):
+                return
+            self._driver_release()
 
     def result(self) -> Union[RunResult, BatteryResult]:
         """Drive to completion (rounds + hold/release retries) and stitch.
         Returns ``RunResult`` for a single-generator spec, ``BatteryResult``
         otherwise."""
-        while True:
-            while self._queue:
-                self.poll()
-            if not self.held() or self.retries >= self.spec.retry.max_retries:
-                break
-            self.release()
-        return self._finalize()
+        return self.drive()._finalize()
 
     def status(self) -> dict:
         """One condor_q-shaped snapshot: state, job/round counters, the
-        HELD set and the per-generator interim verdicts."""
-        state = ("done" if self.done
-                 else "running" if self._queue
-                 else "cancelled" if self.cancelled else "held")
+        HELD set and the per-generator interim verdicts. Cancellation is
+        STICKY: a cancelled run reports ``"cancelled"`` even when every
+        job it executed happens to have completed (``done`` must not win
+        the ladder — condor_rm'ing a finished queue is still a rm)."""
+        state = ("cancelled" if self.cancelled
+                 else "done" if self.done
+                 else "running" if self._queue else "held")
         return {"state": state, "jobs_done": self._jobs_done(),
                 "jobs_total": len(self._compiled.jobs),
                 "pending_rounds": len(self._queue),
@@ -1017,11 +1068,10 @@ class BatteryRun:
     def _finalize(self) -> Union[RunResult, BatteryResult]:
         wall = time.time() - self._t0
         self._update_verdicts()
+        per_pos = self.results_by_position()
         runs: Dict[str, RunResult] = {}
         for g, gen in enumerate(self.spec.generators):
-            combined = stitch.fold_groups(self._results[g],
-                                          self._compiled.jobs,
-                                          self._compiled.combine)
+            combined = per_pos[g]
             rep = stitch.report(self._compiled.entries, combined, gen,
                                 self.spec.seeds[g])
             runs[gen] = RunResult(combined, rep, self.rounds_run,

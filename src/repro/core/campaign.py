@@ -260,21 +260,12 @@ class Campaign:
             print(f"phase {k} ({phase.name}): {n_real} cell(s) "
                   f"(+{pad} pad) on battery={phase.battery} "
                   f"scale={phase.scale:g}", flush=True)
-        handle = self.session.submit(spec)
-        retries = 0
-        while True:
-            while handle.pending_rounds:
-                handle.poll()
-                if all(v.decided for v in
-                       handle.verdicts_by_position()[:n_real]):
-                    handle.cancel()     # every real cell decided early
-                    break
-            if handle.done or handle.cancelled:
-                break
-            if not handle.held() or retries >= spec.retry.max_retries:
-                break
-            retries += 1
-            handle.release()
+        # the shared drive loop (BatteryRun.drive) owns the hold/release
+        # retry budget; stop_when cancels the phase's residual rounds the
+        # moment every REAL cell (padding excluded) is decided
+        handle = self.session.submit(spec).drive(
+            stop_when=lambda h: all(
+                v.decided for v in h.verdicts_by_position()[:n_real]))
         self.rounds_run += handle.rounds_run
         verdicts = handle.verdicts_by_position()[:n_real]
         for grp, v in zip(groups, verdicts):
@@ -291,6 +282,47 @@ class Campaign:
 
     # -- public ------------------------------------------------------------
 
+    @property
+    def complete(self) -> bool:
+        """True once the ledger records every phase as done."""
+        return self.ledger.phases_done >= len(self.phases())
+
+    def run_next_phase(self) -> bool:
+        """Drive ONE remaining phase — the serve daemon's unit of work
+        (a campaign ticket advances a phase per daemon step instead of
+        monopolizing the loop). Returns True when the phase COMPLETED
+        and the ledger advanced; False when the campaign is already
+        complete, or the phase stalled with jobs HELD through the retry
+        budget (the saved ledger + per-phase checkpoint make the next
+        call retry it instead of freezing its cells forever)."""
+        phases = self.phases()
+        k = self.ledger.phases_done
+        if k >= len(phases):
+            return False
+        if not self._run_phase(k, phases[k]):
+            self._save_ledger()     # decisions so far; phase k retries
+            return False
+        self.ledger.phases_done = k + 1
+        self._save_ledger()
+        # drop the phase's resume file only AFTER the ledger records
+        # the phase as done — a crash between the two must lose the
+        # checkpoint-or-progress, never both
+        ck = (f"{self.spec.ledger_path}.phase{k}"
+              if self.spec.ledger_path else None)
+        if ck and ckpt_io.exists(ck):
+            os.remove(ck)
+        return True
+
+    def result_snapshot(self, wall_s: float = 0.0) -> CampaignResult:
+        """The per-cell decision matrix as it stands — valid after any
+        phase boundary, not just at completion (a serve ticket's interim
+        and final result both come from here)."""
+        return CampaignResult(
+            self.spec, self.spec.cells,
+            np.asarray(self.ledger.decisions, np.int8).copy(),
+            np.asarray(self.ledger.decided_phase, np.int8).copy(),
+            [p.name for p in self.phases()], self.rounds_run, wall_s)
+
     def run(self) -> CampaignResult:
         """Drive every remaining phase (resuming from the ledger) and
         return the per-cell decision matrix. An incomplete phase (jobs
@@ -298,27 +330,10 @@ class Campaign:
         with its cells undecided; the saved ledger + per-phase
         checkpoint make the next ``run()`` retry it."""
         t0 = time.time()
-        phases = self.phases()
-        for k in range(self.ledger.phases_done, len(phases)):
-            completed = self._run_phase(k, phases[k])
-            if not completed:
-                self._save_ledger()     # decisions so far; phase k retries
+        while not self.complete:
+            if not self.run_next_phase():
                 break
-            self.ledger.phases_done = k + 1
-            self._save_ledger()
-            # drop the phase's resume file only AFTER the ledger records
-            # the phase as done — a crash between the two must lose the
-            # checkpoint-or-progress, never both
-            ck = (f"{self.spec.ledger_path}.phase{k}"
-                  if self.spec.ledger_path else None)
-            if ck and ckpt_io.exists(ck):
-                os.remove(ck)
-        return CampaignResult(
-            self.spec, self.spec.cells,
-            np.asarray(self.ledger.decisions, np.int8).copy(),
-            np.asarray(self.ledger.decided_phase, np.int8).copy(),
-            [p.name for p in phases], self.rounds_run,
-            time.time() - t0)
+        return self.result_snapshot(time.time() - t0)
 
 
 def screen(spec: CampaignSpec,

@@ -100,6 +100,20 @@ def fold_groups(job_results: Dict[int, tuple], jobs,
     return out
 
 
+def demux_positions(per_position, groups: Dict) -> Dict:
+    """Per-ticket demux of a coalesced dispatch (serve layer, DESIGN.md
+    §10): ``per_position`` is anything indexed by generator POSITION in
+    a merged multi-generator spec (``BatteryRun.results_by_position`` /
+    ``verdicts_by_position``); ``groups`` maps each member (ticket id)
+    to the positions its own spec contributed. Returns
+    ``{member: [per_position[p] for its positions]}`` — the inverse of
+    the admission batcher's spec merge."""
+    out = {}
+    for member, positions in groups.items():
+        out[member] = [per_position[int(p)] for p in positions]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # sequential verdict engine (adaptive early stopping, DESIGN.md §4)
 

@@ -29,6 +29,16 @@ the remaining rounds replan onto it, e.g. ``--resize-at 2:4,5:8`` for a
 pool that shrinks to 4 workers after round 2 and grows back to 8 after
 round 5. Stitched p-values are bitwise identical to a fixed-width run.
 
+``--serve`` routes the run through the screening service
+(``repro.serve``, DESIGN.md §10): each ``--gen`` entry is submitted as
+its OWN ticket — separate clients — and the submission queue coalesces
+them into one shared dispatch per round, memoizing every cell in the
+content-addressed result cache under ``--serve-state``.
+``--serve-resubmit`` submits the first generator's spec a second time
+after completion to demonstrate the cache path (zero added
+dispatches); the ``--json`` payload gains a ``"serve"`` section with
+the ticket table, batch/dispatch counters and cache traffic.
+
 ``--campaign`` switches to generator-FLEET screening (DESIGN.md §8):
 the ``--gen`` list x ``--streams`` sub-stream offsets are screened in
 ``--waves`` battery scales (cheapest first), failed cells knocked out
@@ -96,7 +106,35 @@ def main():
     ap.add_argument("--no-stream-check", dest="stream_check",
                     action="store_false",
                     help="skip the pairstream seam phase of a campaign")
+    ap.add_argument("--serve", action="store_true",
+                    help="submit through the screening service: one "
+                         "ticket per --gen entry, coalesced by the "
+                         "admission batcher, memoized in the result "
+                         "cache (repro.serve)")
+    ap.add_argument("--serve-state", dest="serve_state", default=None,
+                    help="serve state dir (result cache + batch "
+                         "checkpoints; restart-resumable)")
+    ap.add_argument("--serve-resubmit", dest="serve_resubmit",
+                    action="store_true",
+                    help="resubmit the first generator's spec after "
+                         "completion (cache-hit demo: zero dispatches)")
+    ap.add_argument("--serve-max-wait", dest="serve_max_wait",
+                    type=float, default=0.0,
+                    help="admission fairness bound (seconds) for --serve")
     args = ap.parse_args()
+    if not args.serve:
+        for flag, default, name in ((args.serve_state, None,
+                                     "--serve-state"),
+                                    (args.serve_resubmit, False,
+                                     "--serve-resubmit"),
+                                    (args.serve_max_wait, 0.0,
+                                     "--serve-max-wait")):
+            if flag != default:
+                ap.error(f"{name} only applies with --serve")
+    elif args.campaign or args.resize_at or args.ckpt:
+        ap.error("--serve cannot combine with --campaign/--resize-at/"
+                 "--ckpt (serve batches own their checkpoints under "
+                 "--serve-state)")
     if not args.campaign:
         for flag, default, name in ((args.waves, None, "--waves"),
                                     (args.streams, 1, "--streams"),
@@ -210,27 +248,79 @@ def main():
           + (f"->{backend_resolved}" if args.backend == "auto" else "")
           + (f" adaptive(alpha={args.alpha})" if args.adaptive else ""))
 
-    handle = session.submit(spec)
     resizes = []
-    for rnd in sorted(resize_at):               # elastic re-meshing demo
-        while handle.pending_rounds and handle.rounds_run < rnd:
-            handle.poll()
-        if handle.pending_rounds:
-            session.resize(resize_at[rnd])
-            resizes.append({"round": handle.rounds_run,
-                            "workers": resize_at[rnd]})
-            print(f"  resize: pool -> {resize_at[rnd]} workers after "
-                  f"round {handle.rounds_run}")
-    res = handle.result()
-    multi = isinstance(res, BatteryResult)
-    runs = res.runs if multi else {gens[0]: res}
+    serve_info = None
+    if args.serve:
+        from repro.serve import SubmissionQueue       # noqa: E402
+        queue = SubmissionQueue(session=session,
+                                state_dir=args.serve_state,
+                                max_wait=args.serve_max_wait)
+        # one ticket per generator: independent clients whose compatible
+        # specs the admission batcher coalesces into shared dispatches
+        gen_specs = [RunSpec(args.battery, generators=(g,),
+                             seeds=(args.seed,), scale=args.scale,
+                             policy=args.policy,
+                             retry=RetryPolicy(max_retries=args.retries),
+                             alpha=args.alpha,
+                             stop_on_verdict=args.adaptive,
+                             backend=args.backend) for g in gens]
+        tickets = [queue.submit(s) for s in gen_specs]
+        queue.drain()
+        runs = {g: t.result() for g, t in zip(gens, tickets)}
+        resubmit = None
+        if args.serve_resubmit:
+            before = queue.dispatch_rounds
+            rticket = queue.submit(gen_specs[0])
+            done_at_submit = rticket.done
+            queue.drain()
+            rticket.result()
+            resubmit = {"ticket": rticket.id,
+                        "cache_hits": rticket.cache_hits,
+                        "done_at_submit": done_at_submit,
+                        "dispatches_added": queue.dispatch_rounds - before}
+            print(f"  resubmit {gens[0]}: cache_hits="
+                  f"{rticket.cache_hits} dispatches_added="
+                  f"{resubmit['dispatches_added']}")
+        stats = queue.stats()
+        serve_info = {
+            "state": args.serve_state, "max_wait": args.serve_max_wait,
+            "tickets": [{"ticket": t.id, "gen": g, "state": t.state,
+                         "batch": t.batch_id, "cache_hits": t.cache_hits}
+                        for g, t in zip(gens, tickets)],
+            "batches": stats["batches"],
+            "dispatch_rounds": stats["dispatch_rounds"],
+            "cache": stats["cache"], "traces": stats["traces"],
+            "resubmit": resubmit}
+        print(f"serve: {len(tickets)} ticket(s) -> "
+              f"{stats['batches']} batch(es), "
+              f"{stats['dispatch_rounds']} dispatch round(s), "
+              f"{stats['cache']['hits']} cache hit(s)")
+        wall_s = max(r.wall_s for r in runs.values())
+        rounds_run = max(r.rounds_run for r in runs.values())
+        retries_total = max(r.retries for r in runs.values())
+    else:
+        handle = session.submit(spec)
+        for rnd in sorted(resize_at):           # elastic re-meshing demo
+            while handle.pending_rounds and handle.rounds_run < rnd:
+                handle.poll()
+            if handle.pending_rounds:
+                session.resize(resize_at[rnd])
+                resizes.append({"round": handle.rounds_run,
+                                "workers": resize_at[rnd]})
+                print(f"  resize: pool -> {resize_at[rnd]} workers after "
+                      f"round {handle.rounds_run}")
+        res = handle.result()
+        multi = isinstance(res, BatteryResult)
+        runs = res.runs if multi else {gens[0]: res}
+        wall_s, rounds_run = res.wall_s, res.rounds_run
+        retries_total = res.retries
     for run in runs.values():
         print(run.report)
     for gen, run in runs.items():
         print(f"verdict[{gen}]: {run.verdict}")
-    print(f"\nwall={res.wall_s:.1f}s rounds={res.rounds_run}"
-          f"/{res.runs[gens[0]].plan_rounds if multi else res.plan_rounds}"
-          f" retries={res.retries}")
+    print(f"\nwall={wall_s:.1f}s rounds={rounds_run}"
+          f"/{next(iter(runs.values())).plan_rounds}"
+          f" retries={retries_total}")
 
     if args.json_path:
         entries = session.entries(spec)
@@ -241,11 +331,13 @@ def main():
             "backend_resolved": backend_resolved,
             "adaptive": args.adaptive, "alpha": args.alpha,
             "resizes": resizes,
-            "seed": args.seed, "wall_s": round(res.wall_s, 3),
-            "rounds_run": res.rounds_run, "retries": res.retries,
+            "seed": args.seed, "wall_s": round(wall_s, 3),
+            "rounds_run": rounds_run, "retries": retries_total,
             "plan_rounds": next(iter(runs.values())).plan_rounds,
             "runs": {},
         }
+        if serve_info is not None:
+            payload["serve"] = serve_info
         for gen, run in runs.items():
             tests = []
             for e in entries:

@@ -1,58 +1,158 @@
-# repro: quarantine -- growth-seed LM launch tooling; superseded by repro.launch.battery
-"""Serving driver: batched prefill + greedy decode loop."""
+"""Serve daemon CLI — screening-as-a-service over one pool session.
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --submit specs.json --state serve-state --workers 8 --json out.json
+
+``--submit`` takes a JSON file holding a LIST of submission dicts; each
+dict is one client's spec (one ticket). Run submissions::
+
+  {"battery": "smallcrush", "gen": "splitmix64", "seed": 7,
+   "scale": 0.25, "policy": "lpt", "alpha": 0.01, "adaptive": false,
+   "backend": "auto", "offset": 0, "retries": 2}
+
+(only ``battery`` and ``gen`` are required; ``gen`` may be a
+comma-separated list for a multi-generator spec on ONE ticket).
+Campaign submissions set ``"kind": "campaign"`` plus the campaign
+fields (``streams``, ``waves``, ``ledger``, ``stream_check``).
+
+The daemon coalesces compatible submissions into shared dispatches
+(admission batching, window from ``--max-wait``) and serves repeat
+submissions from the content-addressed result cache persisted under
+``--state`` — resubmitting a finished spec costs ZERO dispatches, and
+a daemon restarted on the same ``--state`` resumes in-flight batches
+from their checkpoints (DESIGN.md §10). ``--json`` writes the ticket
+table and the daemon counters. Exit 0 iff every ticket completed.
+"""
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCH_IDS, get_config, get_reduced
-from repro.models import decode as dec
-from repro.models import lm
+import json
+import os
+import sys
 
 
-def serve(arch: str, reduced: bool = True, batch: int = 4,
-          prompt_len: int = 32, gen_len: int = 16, seed: int = 0):
-    cfg = get_reduced(arch) if reduced else get_config(arch)
-    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
-    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
-                                 (batch, prompt_len), 0, cfg.vocab_size)
-    frames = (jax.random.normal(jax.random.PRNGKey(2),
-                                (batch, cfg.encoder_seq, cfg.d_model))
-              if cfg.family == "audio" else None)
-    max_seq = prompt_len + gen_len
+def spec_from_dict(d: dict):
+    """One submission dict (the ``--submit`` wire shape, module
+    docstring) -> a ``RunSpec`` or ``CampaignSpec``."""
+    from repro.core.api import CampaignSpec, RunSpec
+    from repro.core.policies import RetryPolicy
+    d = dict(d)
+    kind = d.pop("kind", "run")
+    battery = d.pop("battery")
+    gens = d.pop("gen")
+    if isinstance(gens, str):
+        gens = tuple(g.strip() for g in gens.split(",") if g.strip())
+    else:
+        gens = tuple(gens)
+    retry = RetryPolicy(max_retries=int(d.pop("retries", 2)))
+    if kind == "campaign":
+        waves = d.pop("waves", None)
+        spec = CampaignSpec(
+            battery, generators=gens,
+            n_streams=int(d.pop("streams", 1)),
+            seed=int(d.pop("seed", 42)),
+            waves=(tuple(float(w) for w in waves) if waves
+                   else (float(d.pop("scale", 0.25)),)),
+            alpha=float(d.pop("alpha", 0.01)),
+            policy=d.pop("policy", "lpt"), retry=retry,
+            backend=d.pop("backend", "auto"),
+            stream_check=bool(d.pop("stream_check", True)),
+            ledger_path=d.pop("ledger", None))
+    elif kind == "run":
+        offset = int(d.pop("offset", 0))
+        spec = RunSpec(
+            battery, generators=gens,
+            seeds=(int(d.pop("seed", 42)),),
+            scale=float(d.pop("scale", 0.25)),
+            policy=d.pop("policy", "lpt"), retry=retry,
+            alpha=float(d.pop("alpha", 0.01)),
+            stop_on_verdict=bool(d.pop("adaptive", False)),
+            backend=d.pop("backend", "auto"),
+            offsets=offset if offset else None)
+    else:
+        raise ValueError(f"unknown submission kind {kind!r}")
+    if d:
+        raise ValueError(f"unknown submission field(s): {sorted(d)}")
+    return spec
 
-    prefill_fn = jax.jit(lambda p, t, f: dec.prefill(p, t, cfg,
-                                                     max_seq=max_seq,
-                                                     frames=f),
-                         static_argnames=())
-    step_fn = jax.jit(lambda p, c, t: dec.decode_step(p, c, t, cfg),
-                      donate_argnames=("c",))
 
-    t0 = time.time()
-    logits, cache = prefill_fn(params, prompts, frames)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out = [tok]
-    for _ in range(gen_len - 1):
-        logits, cache = step_fn(params, cache, tok)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    toks = jnp.concatenate(out, axis=1)
-    dt = time.time() - t0
-    return toks, dt
+def ticket_row(ticket) -> dict:
+    """One ticket's JSON report row (status + final decisions)."""
+    row = ticket.status()
+    if ticket.state == "done":
+        res = ticket.result()
+        if ticket.kind == "campaign":
+            row["survivors"] = len(res.survivors)
+            row["knockouts"] = len(res.knockouts)
+        else:
+            runs = getattr(res, "runs", None)
+            if runs is None:
+                runs = {ticket.spec.generators[0]: res}
+            row["verdicts"] = {g: r.verdict.decision
+                               for g, r in runs.items()}
+    return row
 
 
 def main():
+    """Entry point: read ``--submit``, drain the queue, report."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b", choices=list(ARCH_IDS))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--submit", required=True,
+                    help="JSON file: a list of submission dicts "
+                         "(one ticket each; see module docstring)")
+    ap.add_argument("--state", default=None,
+                    help="daemon state dir: result cache + batch "
+                         "checkpoints (restart-resumable)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = all local devices")
+    ap.add_argument("--max-wait", dest="max_wait", type=float, default=0.0,
+                    help="admission fairness bound (seconds): how long a "
+                         "submission may wait for batch companions")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write the ticket table + daemon counters here")
     args = ap.parse_args()
-    toks, dt = serve(args.arch, batch=args.batch, gen_len=args.gen)
-    print(f"generated {toks.shape} tokens in {dt:.2f}s")
-    print(toks[0])
+
+    with open(args.submit) as f:
+        submissions = json.load(f)
+    if not isinstance(submissions, list) or not submissions:
+        ap.error(f"--submit {args.submit}: expected a non-empty JSON list "
+                 "of submission dicts")
+
+    if args.workers > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.workers}"
+
+    from repro.core.api import PoolSession            # noqa: E402 (after env)
+    from repro.launch.mesh import make_pool_mesh      # noqa: E402
+    from repro.serve import SubmissionQueue           # noqa: E402
+
+    session = PoolSession(mesh=make_pool_mesh(args.workers or None))
+    queue = SubmissionQueue(session=session, state_dir=args.state,
+                            max_wait=args.max_wait)
+    tickets = [queue.submit(spec_from_dict(d)) for d in submissions]
+    print(f"serve: {len(tickets)} submission(s) | "
+          f"{session.n_workers} worker(s) | state={args.state or '-'} "
+          f"max_wait={args.max_wait:g}s")
+    queue.drain()
+    stats = queue.stats()
+    for t in tickets:
+        print(f"  {t.id}: {t.state} (batch={t.batch_id} "
+              f"cache_hits={t.cache_hits})")
+    print(f"batches={stats['batches']} "
+          f"dispatch_rounds={stats['dispatch_rounds']} "
+          f"cache_hits={stats['cache']['hits']} "
+          f"traces={stats['traces']}")
+
+    if args.json_path:
+        payload = {"workers": session.n_workers, "state": args.state,
+                   "max_wait": args.max_wait,
+                   "tickets": [ticket_row(t) for t in tickets],
+                   "stats": stats}
+        os.makedirs(os.path.dirname(args.json_path) or ".", exist_ok=True)
+        with open(args.json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"json report -> {args.json_path}")
+
+    sys.exit(0 if all(t.state == "done" for t in tickets) else 1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""repro.serve — screening-as-a-service (DESIGN.md §10).
+
+A persistent submission daemon over ONE ``PoolSession``: many clients
+submit ``RunSpec``/``CampaignSpec``s, get non-blocking ``Ticket``
+handles back, and the queue coalesces compatible submissions into
+shared dispatches (admission batching) while a content-addressed
+result cache answers repeat submissions with zero dispatches."""
+from repro.serve.cache import (CACHE_VERSION, CacheEntry, ResultCache,
+                               cell_digest)
+from repro.serve.queue import (SubmissionQueue, Ticket, admission_key,
+                               spec_cells)
+
+__all__ = [
+    "CACHE_VERSION", "CacheEntry", "ResultCache", "cell_digest",
+    "SubmissionQueue", "Ticket", "admission_key", "spec_cells",
+]

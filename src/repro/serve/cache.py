@@ -1,0 +1,186 @@
+"""Content-addressed result cache for the serve layer (DESIGN.md §10).
+
+Every unit of screening work the fleet can ever be asked to repeat is a
+CELL: one generator at one (seed, stream-offset) screened by one
+(battery, scale) under one (alpha, backend). ``cell_digest`` names a
+cell by the sha256 of exactly that tuple — nothing about WHO asked, WHEN
+it ran, or how wide the pool was — so a repeat submission anywhere in
+the fleet resolves to the same address and its verdict returns in O(1)
+without a dispatch.
+
+``CacheEntry`` persists with the same wire discipline as the v3
+checkpoint and the campaign ledger (``ckpt/io`` flat leaves, a version
+constant the reader actually checks, atomic writes): one file per digest
+under the cache root. Entries record whether the stored results are
+COMPLETE (every test of the battery has a value) — a partial entry
+(an adaptive run cancelled at FAIL) still serves stop-on-verdict
+resubmissions, whose contract is the decision, but never a classic
+resubmission that expects the full report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.ckpt import io as ckpt_io
+from repro.core import stitch
+
+CACHE_VERSION = 1
+
+# decision codes on the wire — same convention as api.CELL_* and the
+# checkpoint's verdict codes
+_DECISION_CODE = {stitch.UNDECIDED: 0, stitch.PASS: 1, stitch.FAIL: 2}
+_CODE_DECISION = {v: k for k, v in _DECISION_CODE.items()}
+
+
+def cell_digest(battery: str, scale: float, generator: str, seed: int,
+                offset: int, alpha: float, backend: str) -> str:
+    """The cell's content address: a 32-hex-char sha256 prefix over the
+    full decision-relevant identity (generator, seed, offset, battery,
+    scale, alpha, backend). ``backend`` must be the RESOLVED backend
+    (``stats.backends.resolve``) — "auto" and the backend it resolves to
+    are the same work, and both backends' verdicts are parity-asserted,
+    so the caller chooses whether to pass the resolved name (shared
+    slots per host class) per the serve layer's convention."""
+    key = repr((str(battery), float(scale), str(generator), int(seed),
+                int(offset), float(alpha), str(backend)))
+    return hashlib.sha256(key.encode()).hexdigest()[:32]
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One cell's memoized outcome: the combined TEST-space results
+    (test index -> (stat, p)), the sequential-verdict decision they
+    recompute to, the alpha it was computed under, the battery size and
+    a completeness flag. ``results``/``decision`` are exactly what a
+    fresh run of the same cell would produce — decisions are a pure
+    function of (results, alpha), which is what makes memoization sound.
+
+    Wire layout (``ckpt/io`` leaves)::
+
+      [version, idx (K,) int32, stats (K,) float64, ps (K,) float64,
+       decision int8, alpha float64, n_total int64, complete int8]
+    """
+    results: Dict[int, tuple]
+    decision: str
+    alpha: float
+    n_total: int
+    complete: bool
+    version: int = CACHE_VERSION
+
+    @classmethod
+    def from_results(cls, results: Dict[int, tuple], n_total: int,
+                     alpha: float) -> "CacheEntry":
+        """Build an entry from a finished (or verdict-decided) cell's
+        combined results; decision and completeness are derived, never
+        trusted from the caller."""
+        verdict = stitch.sequential_verdict(results, n_total, alpha)
+        complete = not stitch.missing(results, n_total)
+        return cls(dict(results), verdict.decision, float(alpha),
+                   int(n_total), complete)
+
+    def verdict(self) -> stitch.Verdict:
+        """The sequential verdict recomputed from the stored results —
+        bitwise the one the original run reported (pure function)."""
+        return stitch.sequential_verdict(self.results, self.n_total,
+                                         self.alpha)
+
+    def serves(self, stop_on_verdict: bool) -> bool:
+        """Can this entry satisfy a resubmission? A complete entry
+        serves everyone; a partial one only serves a ``stop_on_verdict``
+        client, and only when its decision is definitive."""
+        if self.complete:
+            return True
+        return bool(stop_on_verdict
+                    and self.decision != stitch.UNDECIDED)
+
+    @classmethod
+    def load(cls, path: str) -> "CacheEntry":
+        """Read (and version-check) one cache file."""
+        leaves = ckpt_io.load_flat(path)
+        if len(leaves) != 8:
+            raise ValueError(f"cache entry {path} has {len(leaves)} "
+                             "leaves; expected 8")
+        ver, idx, st, pv, dec, alpha, n_total, complete = leaves
+        if int(ver) != CACHE_VERSION:
+            raise ValueError(
+                f"cache entry {path} declares version {int(ver)}; "
+                f"this build reads v{CACHE_VERSION}")
+        results = {int(i): (float(s), float(p))
+                   for i, s, p in zip(np.asarray(idx, np.int32),
+                                      np.asarray(st, np.float64),
+                                      np.asarray(pv, np.float64))}
+        return cls(results, _CODE_DECISION[int(dec)], float(alpha),
+                   int(n_total), bool(int(complete)), CACHE_VERSION)
+
+    def save(self, path: str) -> None:
+        """Write the 8-leaf wire layout (atomic — ``ckpt_io.save``)."""
+        idx = np.asarray(sorted(self.results), np.int32)
+        ckpt_io.save(path, [
+            np.int64(CACHE_VERSION), idx,
+            np.asarray([self.results[int(i)][0] for i in idx], np.float64),
+            np.asarray([self.results[int(i)][1] for i in idx], np.float64),
+            np.int8(_DECISION_CODE[self.decision]),
+            np.float64(self.alpha), np.int64(self.n_total),
+            np.int8(1 if self.complete else 0)])
+
+
+class ResultCache:
+    """Digest-keyed verdict memo, in-memory with optional persistence.
+
+    With a ``root`` directory every ``put`` also writes
+    ``<root>/<digest>.ck`` and a cold ``get`` falls through to disk — a
+    restarted daemon (or a second one sharing the directory) serves the
+    whole fleet's history. ``hits``/``misses`` count lookups for the
+    serve report; a disk fall-through still counts as a hit."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root
+        if root:
+            os.makedirs(root, exist_ok=True)
+        self._mem: Dict[str, CacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, digest: str) -> Optional[str]:
+        return os.path.join(self.root, f"{digest}.ck") if self.root else None
+
+    def get(self, digest: str,
+            stop_on_verdict: bool = False) -> Optional[CacheEntry]:
+        """The entry for ``digest`` when one exists AND it can serve
+        this client (``CacheEntry.serves``); ``None`` counts a miss."""
+        entry = self._mem.get(digest)
+        if entry is None:
+            path = self._path(digest)
+            if path and os.path.exists(path):
+                entry = CacheEntry.load(path)
+                self._mem[digest] = entry
+        if entry is not None and entry.serves(stop_on_verdict):
+            self.hits += 1
+            return entry
+        self.misses += 1
+        return None
+
+    def put(self, digest: str, entry: CacheEntry) -> None:
+        """Memoize (and persist) one cell's outcome. A complete entry
+        never downgrades to a partial one — an adaptive resubmission of
+        an already fully-screened cell must not erase the full report."""
+        old = self._mem.get(digest)
+        if old is None:
+            path = self._path(digest)
+            if path and os.path.exists(path):
+                old = CacheEntry.load(path)
+        if old is not None and old.complete and not entry.complete:
+            return
+        self._mem[digest] = entry
+        path = self._path(digest)
+        if path:
+            entry.save(path)
+
+    def __len__(self) -> int:
+        """Entries currently held in memory."""
+        return len(self._mem)

@@ -22,6 +22,11 @@ CAMPAIGN_TOP_KEYS = {"battery", "workers", "policy", "backend",
 CAMPAIGN_KEYS = {"n_streams", "waves", "span", "phases", "stream_check",
                  "survivors", "knockouts", "undecided", "cells"}
 CELL_KEYS = {"gen", "stream", "decision", "phase"}
+SERVE_KEYS = {"state", "max_wait", "tickets", "batches",
+              "dispatch_rounds", "cache", "resubmit", "traces"}
+SERVE_TICKET_KEYS = {"ticket", "gen", "state", "batch", "cache_hits"}
+SERVE_RESUBMIT_KEYS = {"ticket", "cache_hits", "done_at_submit",
+                       "dispatches_added"}
 
 
 def _cli(json_path, *args):
@@ -74,6 +79,35 @@ def test_battery_json_verdict_fields(battery_report):
     assert rep["runs"]["randu"]["verdict"] == "FAIL"    # canary
     assert rep["runs"]["splitmix64"]["verdict"] in ("PASS", "UNDECIDED")
     assert code == 1                                    # randu failed
+
+
+def test_serve_json_golden_keys(tmp_path):
+    """--serve adds EXACTLY one top-level key ("serve") to the run
+    payload — and only under --serve, so the classic schema is
+    untouched — carrying the ticket table, the coalescing counters and
+    the resubmit cache-hit demo."""
+    path = str(tmp_path / "serve.json")
+    code, rep = _cli(path, "--battery", "smallcrush", "--gen",
+                     "splitmix64,pcg32", "--scale", "0.01", "--seed",
+                     "7", "--serve", "--serve-resubmit",
+                     "--serve-state", str(tmp_path / "state"))
+    assert code == 0
+    assert set(rep) == RUN_KEYS | {"serve"}
+    serve = rep["serve"]
+    assert set(serve) == SERVE_KEYS
+    assert serve["batches"] == 1            # two clients, ONE batch
+    assert len(serve["tickets"]) == 2
+    for t in serve["tickets"]:
+        assert set(t) == SERVE_TICKET_KEYS
+        assert t["state"] == "done" and t["batch"] == 0
+    resub = serve["resubmit"]
+    assert set(resub) == SERVE_RESUBMIT_KEYS
+    assert resub["done_at_submit"] is True
+    assert resub["dispatches_added"] == 0   # served from the cache
+    assert resub["cache_hits"] == 1
+    assert set(rep["runs"]) == {"splitmix64", "pcg32"}
+    for run in rep["runs"].values():
+        assert set(run) == PER_GEN_KEYS
 
 
 def test_campaign_json_golden_keys(tmp_path):

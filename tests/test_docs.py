@@ -69,6 +69,19 @@ def test_backends_module_documented():
     assert d == t, f"backends.py: {t - d} undocumented public def(s)"
 
 
+def test_serve_layer_fully_documented():
+    """The serving surface (repro/serve + its daemon CLI) is public API
+    from day one — held to 100% like api.py/policies.py."""
+    serve_dir = os.path.join(REPO, "src", "repro", "serve")
+    paths = [os.path.join(serve_dir, f)
+             for f in sorted(os.listdir(serve_dir)) if f.endswith(".py")]
+    paths.append(os.path.join(REPO, "src", "repro", "launch", "serve.py"))
+    for path in paths:
+        d, t = _covered(path)
+        assert d == t, (f"{os.path.relpath(path, REPO)}: {t - d} "
+                        f"undocumented public def(s)")
+
+
 def test_readme_links_and_paths_exist():
     """README examples/paths/DESIGN sections must not rot."""
     with open(os.path.join(REPO, "README.md")) as f:

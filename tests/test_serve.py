@@ -1,0 +1,276 @@
+"""Serve-layer tests: the hold/release retry-budget bug sweep on
+``BatteryRun`` (manual release must not spend the driver's budget,
+``stream()`` must drive retry rounds, cancellation must be sticky) and
+the screening service itself — admission batching (two clients, ONE
+shared dispatch per round), the content-addressed result cache (repeat
+submission, zero dispatches) and daemon crash/restart resume."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import stitch
+from repro.core.api import BatteryRun, CampaignSpec, PoolSession, RunSpec
+from repro.core.policies import RetryPolicy
+from repro.serve import (CacheEntry, ResultCache, SubmissionQueue,
+                         admission_key, cell_digest, spec_cells)
+
+SCALE = 0.01
+NAN = float("nan")
+
+
+@pytest.fixture(scope="module")
+def session():
+    return PoolSession()
+
+
+def _spec(gen="splitmix64", seed=7, **kw):
+    kw.setdefault("scale", SCALE)
+    return RunSpec("smallcrush", gen, seeds=(seed,), **kw)
+
+
+def _spoil_job0(monkeypatch, rounds_to_spoil):
+    """Patch ``BatteryRun._dispatch`` so job 0's result is invalid (the
+    HELD condition) for the first ``rounds_to_spoil`` dispatches that
+    cover it — deterministic kernels never hold naturally."""
+    orig = BatteryRun._dispatch
+    seen = {"n": 0}
+
+    def flaky(self, row):
+        orig(self, row)
+        if 0 in {int(j) for j in np.ravel(row)}:
+            if seen["n"] < rounds_to_spoil:
+                self._results[0][0] = (NAN, NAN)
+            seen["n"] += 1
+
+    monkeypatch.setattr(BatteryRun, "_dispatch", flaky)
+    return seen
+
+
+# ------------------------------------------------- hold/release bug sweep
+
+def test_manual_release_does_not_spend_driver_budget(session, monkeypatch):
+    """A user-initiated ``release()`` must not reduce the number of
+    automatic hold/release retries ``result()`` performs (the retry
+    budget regression): the driver budgets against ``driver_retries``,
+    while ``retries`` keeps counting every release for reporting."""
+    _spoil_job0(monkeypatch, rounds_to_spoil=10**9)     # held forever
+    run = session.submit(_spec(retry=RetryPolicy(max_retries=2)))
+    while run.pending_rounds:
+        run.poll()
+    assert run.held() == [0]
+    assert run.release() == 1                   # manual — must be FREE
+    assert (run.retries, run.driver_retries) == (1, 0)
+    res = run.result()
+    # the driver still got its FULL budget of 2 after the manual release
+    assert run.driver_retries == 2
+    assert run.retries == 3                     # 1 manual + 2 driver
+    assert "MISSING/HELD" in res.report         # job 0 never recovered
+
+
+def test_stream_drives_hold_release_rounds(session, monkeypatch):
+    """``stream()`` must not exit while jobs are HELD and budget
+    remains: a transiently-failing job is released and re-run inside
+    the stream, which ends with the run complete."""
+    _spoil_job0(monkeypatch, rounds_to_spoil=1)         # fails once
+    run = session.submit(_spec(retry=RetryPolicy(max_retries=2)))
+    statuses = list(run.stream())
+    assert run.done and not run.held()
+    assert run.driver_retries == 1              # one retry round, streamed
+    assert statuses[-1]["state"] == "done"
+    assert run.result().verdict.decision == "PASS"
+
+
+def test_cancel_is_sticky_after_completion(session):
+    """condor_rm of a finished queue is still a rm: ``status()`` must
+    report "cancelled" even when every executed job completed."""
+    run = session.submit(_spec())
+    while run.pending_rounds:
+        run.poll()
+    assert run.status()["state"] == "done"
+    run.cancel()
+    assert run.status()["state"] == "cancelled"
+
+
+# ------------------------------------------------------- cache primitives
+
+def test_cell_digest_sensitivity():
+    base = ("smallcrush", SCALE, "splitmix64", 7, 0, 0.01, "reference")
+    d = cell_digest(*base)
+    assert d == cell_digest(*base)              # deterministic
+    for i in range(len(base)):
+        other = list(base)
+        other[i] = {0: "crush", 1: 0.5, 2: "pcg32", 3: 8, 4: 3,
+                    5: 0.05, 6: "accelerated"}[i]
+        assert cell_digest(*other) != d, f"field {i} not in the digest"
+
+
+def test_cache_entry_roundtrip(tmp_path):
+    results = {i: (1.0, 0.5) for i in range(10)}
+    entry = CacheEntry.from_results(results, 10, alpha=0.01)
+    assert entry.complete and entry.decision == stitch.PASS
+    path = str(tmp_path / "cell.ck")
+    entry.save(path)
+    back = CacheEntry.load(path)
+    assert back.results == entry.results
+    assert (back.decision, back.alpha, back.n_total, back.complete) == \
+        (entry.decision, entry.alpha, entry.n_total, entry.complete)
+    assert back.verdict().decision == stitch.PASS
+
+
+def test_partial_entry_serves_only_decided_adaptive_clients():
+    decided = CacheEntry.from_results({0: (9.9, 1e-12)}, 10, alpha=0.01)
+    assert not decided.complete and decided.decision == stitch.FAIL
+    assert decided.serves(stop_on_verdict=True)
+    assert not decided.serves(stop_on_verdict=False)
+    undecided = CacheEntry.from_results({0: (1.0, 0.5)}, 10, alpha=0.01)
+    assert not undecided.serves(True) and not undecided.serves(False)
+
+
+def test_cache_never_downgrades_complete_entries(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    full = CacheEntry.from_results({i: (1.0, 0.5) for i in range(10)},
+                                   10, alpha=0.01)
+    partial = CacheEntry.from_results({0: (9.9, 1e-12)}, 10, alpha=0.01)
+    cache.put("d", full)
+    cache.put("d", partial)                     # must not downgrade
+    assert cache.get("d").complete
+    # same discipline when the complete entry is only on disk
+    cold = ResultCache(str(tmp_path / "cache"))
+    cold.put("d", partial)
+    assert cold.get("d").complete
+
+
+def test_demux_positions_inverts_the_merge():
+    per_pos = [{0: (1.0, 0.1)}, {0: (2.0, 0.2)}, {0: (3.0, 0.3)}]
+    out = stitch.demux_positions(per_pos, {"a": [2, 0], "b": [1]})
+    assert out == {"a": [{0: (3.0, 0.3)}, {0: (1.0, 0.1)}],
+                   "b": [{0: (2.0, 0.2)}]}
+
+
+def test_admission_key_groups_compatible_specs():
+    a, b = _spec("splitmix64"), _spec("pcg32", seed=99)
+    assert admission_key(a) == admission_key(b)     # coalescible
+    assert admission_key(a) != admission_key(_spec(alpha=0.05))
+    assert admission_key(a) != admission_key(_spec(scale=0.02))
+    assert [c.digest for c in spec_cells(a)] != \
+        [c.digest for c in spec_cells(b)]
+
+
+# ------------------------------------------------------- submission queue
+
+def test_two_clients_share_one_dispatch_per_round(tmp_path):
+    """The tentpole invariant: two compatible concurrent submissions
+    execute as ONE merged batch — one trace, one dispatch per round —
+    and each ticket gets exactly its own generator's results back."""
+    session = PoolSession()
+    queue = SubmissionQueue(session=session,
+                            state_dir=str(tmp_path / "state"))
+    t1 = queue.submit(_spec("splitmix64"))
+    t2 = queue.submit(_spec("pcg32"))
+    queue.drain()
+    assert queue.batches_formed == 1
+    assert t1.batch_id == t2.batch_id == 0
+    assert session.total_traces == 1            # ONE merged round program
+    r1, r2 = t1.result(), t2.result()
+    # shared rounds, not the sum of two solo runs
+    assert queue.dispatch_rounds == r1.rounds_run == r2.rounds_run
+    assert r1.verdict.decision == r2.verdict.decision == stitch.PASS
+    assert "splitmix64" in r1.report and "pcg32" in r2.report
+    assert len(r1.results) == len(r2.results) == 10
+    assert r1.results != r2.results             # demuxed, not shared
+
+
+def test_resubmission_served_from_cache_with_zero_dispatches(tmp_path):
+    session = PoolSession()
+    queue = SubmissionQueue(session=session,
+                            state_dir=str(tmp_path / "state"))
+    first = queue.submit(_spec())
+    queue.drain()
+    baseline = queue.dispatch_rounds
+    again = queue.submit(_spec())
+    assert again.done and again.cache_hits == 1     # done AT submit
+    queue.drain()
+    assert queue.dispatch_rounds == baseline        # ZERO new dispatches
+    assert again.result().results == first.result().results
+    assert queue.stats()["cache"]["hits"] >= 1
+
+
+def test_concurrent_duplicates_dedup_into_one_position(tmp_path):
+    queue = SubmissionQueue(session=PoolSession(),
+                            state_dir=str(tmp_path / "state"))
+    t1, t2 = queue.submit(_spec()), queue.submit(_spec())
+    queue.drain()
+    assert queue.batches_formed == 1
+    assert len(queue.cache) == 1                # one unique cell
+    assert t1.result().results == t2.result().results
+
+
+def test_daemon_restart_resumes_from_checkpoints(tmp_path):
+    """Crash recovery: a new daemon on the same state_dir, given the
+    same submission, re-forms the same batch and resumes its rounds
+    from the checkpoint instead of starting over."""
+    state = str(tmp_path / "state")
+    q1 = SubmissionQueue(session=PoolSession(), state_dir=state)
+    q1.submit(_spec())
+    q1.step(flush=True)                         # admit + round 1
+    q1.step(flush=True)                         # round 2
+    done_before_crash = q1.dispatch_rounds
+    assert 0 < done_before_crash                # mid-flight "crash"
+    q2 = SubmissionQueue(session=PoolSession(), state_dir=state)
+    t = q2.submit(_spec())
+    q2.drain()
+    res = t.result()
+    assert res.verdict.decision == stitch.PASS
+    # smallcrush = 10 jobs = 10 rounds on one worker; the restarted
+    # daemon only dispatched the rounds the first one hadn't finished
+    assert done_before_crash + q2.dispatch_rounds == 10
+    assert res.plan_rounds == q2.dispatch_rounds    # residual plan only
+
+
+def test_max_wait_window_defers_admission(tmp_path):
+    queue = SubmissionQueue(session=PoolSession(), max_wait=3600.0,
+                            state_dir=str(tmp_path / "state"))
+    t = queue.submit(_spec())
+    assert queue.step() is False                # window open: no batch
+    assert t.state == "queued" and queue.batches_formed == 0
+    queue.drain()                               # flush admits regardless
+    assert queue.batches_formed == 1 and t.done
+
+
+def test_queued_ticket_cancel(tmp_path):
+    queue = SubmissionQueue(session=PoolSession(), max_wait=3600.0)
+    t = queue.submit(_spec())
+    assert t.cancel() and t.state == "cancelled"
+    assert queue.step() is False                # nothing left to admit
+    with pytest.raises(RuntimeError, match="cancelled"):
+        t.result()
+
+
+def test_campaign_ticket_runs_phase_by_phase(tmp_path):
+    spec = CampaignSpec("smallcrush", generators=("splitmix64",),
+                        n_streams=1, seed=7, waves=(SCALE,),
+                        stream_check=False,
+                        ledger_path=str(tmp_path / "ledger.ck"))
+    queue = SubmissionQueue(session=PoolSession())
+    t = queue.submit(spec)
+    queue.drain()
+    res = t.result()
+    assert t.status()["phases_done"] == 1
+    assert len(res.survivors) == 1
+
+
+def test_background_daemon_thread(tmp_path):
+    queue = SubmissionQueue(session=PoolSession(),
+                            state_dir=str(tmp_path / "state")).start()
+    try:
+        assert queue.serving
+        t1 = queue.submit(_spec("splitmix64"))
+        t2 = queue.submit(_spec("pcg32", seed=11))
+        r1 = t1.result(timeout=300)
+        r2 = t2.result(timeout=300)
+        assert r1.verdict.decision == r2.verdict.decision == stitch.PASS
+    finally:
+        queue.stop()
+    assert not queue.serving
+    assert threading.active_count() >= 1        # thread joined cleanly
