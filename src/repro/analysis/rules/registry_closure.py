@@ -9,6 +9,16 @@
           ``COUNTER_BASED`` (else the capability is silently dropped
           at the ``gen_block_by_id`` switch), and ``COUNTER_BASED``
           must be a subset of the registry.
+  RPA403  dynamic-registry declaration — the BitSource plugin registry
+          (``rng.sources.register_generator``) took over RPA401's
+          static closure: every ``register_generator(...)`` call must
+          declare ``counter_based=`` explicitly (the offset capability
+          cannot be inferred from an out-of-repo block function), and a
+          module that registers generators must not ALSO define a
+          static ``COUNTER_BASED`` tuple literal — the live registry
+          (``counter_based_names()``) is the single source of truth,
+          and a parallel static tuple would drift the moment a plugin
+          registers.
   RPA402  version upgrade path — a class whose ``save`` writes a flat
           leaf list (the msgpack wire format) and whose ``load`` reads
           it back via ``load_flat`` must (a) accept the layout it
@@ -104,6 +114,45 @@ def rpa401(project: Project) -> List[Finding]:
                     f"generator '{name}' takes offset= but is not in "
                     f"COUNTER_BASED — its jump-ahead capability is "
                     f"dropped at the offset dispatch"))
+    return out
+
+
+# -- RPA403 ----------------------------------------------------------------
+
+@register("RPA403", "dynamic-registry-declaration",
+          "register_generator calls must declare counter_based=; "
+          "registering modules must not keep a static COUNTER_BASED "
+          "tuple")
+def rpa403(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for path, tree in project.walk():
+        calls = [node for node in ast.walk(tree)
+                 if isinstance(node, ast.Call)
+                 and (dotted_name(node.func) or "").split(".")[-1]
+                 == "register_generator"]
+        if not calls:
+            continue
+        for call in calls:
+            if any(kw.arg == "counter_based" for kw in call.keywords):
+                continue
+            out.append(Finding(
+                "RPA403", "dynamic-registry-declaration", path,
+                call.lineno, call.col_offset + 1,
+                "register_generator(...) without an explicit "
+                "counter_based= keyword — the offset capability of a "
+                "registered source must be DECLARED; stream offsets, "
+                "over-decomposition and campaign grids all dispatch "
+                "on it"))
+        cb_node = _module_assign(tree, "COUNTER_BASED")
+        if cb_node is not None \
+                and _str_elements(cb_node.value) is not None:
+            out.append(Finding(
+                "RPA403", "dynamic-registry-declaration", path,
+                cb_node.lineno, 1,
+                "module registers generators dynamically but also "
+                "defines a static COUNTER_BASED tuple — derive it from "
+                "the live registry (rng.sources.counter_based_names) "
+                "so plugins cannot drift it"))
     return out
 
 

@@ -60,10 +60,12 @@ from repro.ckpt import io as ckpt_io
 from repro.core import stitch
 from repro.core.battery import TestEntry, build_battery
 from repro.core.policies import RetryPolicy, SchedulePolicy, get_policy
-from repro.core.pool import (make_fanout_runner, make_grid_runner,
+from repro.core.pool import (gather_captured_bits, make_external_runner,
+                             make_fanout_runner, make_grid_runner,
                              make_round_runner)
 from repro.core.scheduler import make_plan, replan
-from repro.rng.generators import COUNTER_BASED, GEN_IDS
+from repro.rng.sources import (BitSource, registry_size,
+                               require_offsetable, resolve_source)
 from repro.stats import backends as kernel_backends
 
 # Battery presets (the folded BatteryConfig from common/config.py):
@@ -105,9 +107,19 @@ class RunSpec:
     shapes; any tuple — even all zeros — routes dispatch through the
     offset-taking grid runner, whose executables are shared across every
     offset value. Non-zero offsets require counter-based (offset-
-    continuable) generators; ``mwc`` has no jump-ahead and is refused."""
+    continuable) sources; ``mwc`` has no jump-ahead and is refused.
+
+    ``sources`` is the BitSource spelling of the run's bit supply
+    (rng/sources.py): a tuple of ``BitSource`` objects or declarative
+    specs (``"pcg32"``, ``"file:capture.npy"``, a ``CapturedSource``).
+    ``generators=`` remains the back-compat spelling — names resolve to
+    ``GeneratorSource``s — and after construction BOTH fields are
+    populated (``generators`` holds each source's reporting name), so
+    every consumer that keys results by ``spec.generators[g]`` is
+    untouched. Captured sources dispatch as prefetched host buffers,
+    never as switch lanes (DESIGN.md §11)."""
     battery: str
-    generators: Union[str, Tuple[str, ...]] = ("splitmix64",)
+    generators: Union[str, Tuple[str, ...]] = ()
     seeds: Union[int, Tuple[int, ...]] = (0,)  # repro: runtime-arg
     scale: float = 1.0
     policy: Union[str, SchedulePolicy] = "lpt"
@@ -118,17 +130,25 @@ class RunSpec:
     stop_on_verdict: bool = False  # repro: runtime-arg
     backend: str = "auto"
     offsets: Optional[Union[int, Tuple[int, ...]]] = None
+    sources: Optional[Tuple] = None
 
     def __post_init__(self):
         if self.battery not in BATTERY_SIZES:
             raise KeyError(f"unknown battery {self.battery!r}; "
                            f"known: {sorted(BATTERY_SIZES)}")
-        gens = ((self.generators,) if isinstance(self.generators, str)
-                else tuple(self.generators))
-        for g in gens:
-            if g not in GEN_IDS:
-                raise KeyError(f"unknown generator {g!r}; "
-                               f"known: {sorted(GEN_IDS)}")
+        if self.sources is not None:
+            given = (self.sources if isinstance(self.sources, (tuple, list))
+                     else (self.sources,))
+            srcs = tuple(resolve_source(s) for s in given)
+            if not srcs:
+                raise ValueError("sources must name at least one source")
+            gens = tuple(s.name for s in srcs)
+        else:
+            gens = ((self.generators,) if isinstance(self.generators, str)
+                    else tuple(self.generators))
+            if not gens:
+                gens = ("splitmix64",)
+            srcs = tuple(resolve_source(g) for g in gens)
         seeds = ((self.seeds,) if isinstance(self.seeds, int)
                  else tuple(int(s) for s in self.seeds))
         if len(seeds) == 1:
@@ -139,6 +159,7 @@ class RunSpec:
                 "(give one seed, or one per generator)")
         object.__setattr__(self, "generators", gens)
         object.__setattr__(self, "seeds", seeds)
+        object.__setattr__(self, "sources", srcs)
         if self.offsets is not None:
             offs = ((int(self.offsets),) if isinstance(self.offsets, int)
                     else tuple(int(o) for o in self.offsets))
@@ -148,14 +169,10 @@ class RunSpec:
                 raise ValueError(
                     f"{len(offs)} offsets for {len(gens)} generators "
                     "(give one offset, or one per generator)")
-            for g, o in zip(gens, offs):
+            for s, o in zip(srcs, offs):
                 if o < 0:
                     raise ValueError(f"offsets must be >= 0, got {o}")
-                if o and g not in COUNTER_BASED:
-                    raise ValueError(
-                        f"generator {g!r} is not offset-continuable "
-                        f"(COUNTER_BASED); it cannot take a non-zero "
-                        f"stream offset")
+                require_offsetable(s, o)         # typed, single gate
             object.__setattr__(self, "offsets", offs)
         get_policy(self.policy)                  # validate early
         if not (0.0 < self.alpha < 1.0):
@@ -179,6 +196,24 @@ class RunSpec:
     def n_generators(self) -> int:
         """Width of the fan-out axis (generator positions)."""
         return len(self.generators)
+
+    @property
+    def switch_lanes(self) -> int:
+        """Minimum compiled-switch width this spec's generator-backed
+        sources need: ``1 + max(gen_id)`` over the non-captured sources
+        (0 when every source is captured). ``PoolSession._runner`` keys
+        executables on it, so a generator registered after a switch was
+        traced reuses nothing narrower than its own lane — and specs
+        confined to built-in lanes keep sharing the executables they
+        always shared."""
+        ids = [s.gen_id for s in self.sources if not s.captured]
+        return 1 + max(ids) if ids else 0
+
+    @property
+    def captured_positions(self) -> Tuple[int, ...]:
+        """Source positions dispatched via the prefetched-buffer path
+        (``CapturedSource``) rather than the compiled generator switch."""
+        return tuple(g for g, s in enumerate(self.sources) if s.captured)
 
 
 # ---------------------------------------------------------------------------
@@ -223,38 +258,46 @@ class BatteryResult:
 
 
 # ---------------------------------------------------------------------------
-# checkpoint layout (v3: job-id keyed, worker-count independent)
+# checkpoint layout (v4: job-id keyed, worker-count independent,
+# source-identity pinned)
 
-CKPT_VERSION = 3
+CKPT_VERSION = 4
 
 
 @dataclasses.dataclass
 class Checkpoint:
-    """On-disk battery progress — v3, keyed by JOB ID, never by
+    """On-disk battery progress — v4, keyed by JOB ID, never by
     (round, worker) position. The layout is a pure function of the job
     table, so a checkpoint written on a W=8 mesh resumes bitwise on W=4
     (or any width) after elastic re-meshing (DESIGN.md §6).
 
     Wire layouts (``ckpt/io`` leaves)::
 
-      v3 (written): [version, job_idx (K,), stats (G, K), ps (G, K),
+      v4 (written): [version, job_idx (K,), stats (G, K), ps (G, K),
                      decisions (G,) int8 — empty when absent, rounds_run,
-                     alpha — nan when absent]
+                     alpha — nan when absent, source_uids (G,) bytes —
+                     empty when absent]
+      v3 (read):    v4 without the trailing source_uids leaf
       v2 (read):    [job_idx, stats, ps, decisions, rounds_run]
       v1 (read):    [job_idx, stats, ps]    (stats flat for one generator)
 
-    Loading a v1/v2 file works transparently; the next save upgrades it
-    to v3. ``decisions`` carries the sequential-verdict codes (see
+    Loading a v1/v2/v3 file works transparently; the next save upgrades
+    it to v4. ``decisions`` carries the sequential-verdict codes (see
     ``BatteryRun._DECISION_CODE``); ``None`` means no verdict state.
     ``alpha`` records which error rate the decisions were computed
     under — a resuming run adopts them only when its own alpha matches
-    (they are a pure function of (results, alpha))."""
+    (they are a pure function of (results, alpha)). ``source_uids``
+    pins each generator position's BitSource identity
+    (``BitSource.uid()``): for captured sources the uid embeds the
+    file's content digest, so a checkpoint written against one capture
+    REFUSES to resume against a re-captured (byte-different) file."""
     job_idx: np.ndarray                         # (K,) int32 job ids
     stats: np.ndarray                           # (G, K) float64
     ps: np.ndarray                              # (G, K) float64
     decisions: Optional[np.ndarray] = None      # (G,) int8 verdict codes
     rounds_run: int = 0
     alpha: Optional[float] = None               # decisions' error rate
+    source_uids: Optional[np.ndarray] = None    # (G,) bytes BitSource.uid
     version: int = CKPT_VERSION
 
     @property
@@ -264,44 +307,62 @@ class Checkpoint:
 
     @classmethod
     def load(cls, path: str) -> "Checkpoint":
-        """Read any supported layout (v1/v2/v3) into the v3 shape."""
+        """Read any supported layout (v1/v2/v3/v4) into the v4 shape."""
         leaves = ckpt_io.load_flat(path)
-        if len(leaves) == 7:                    # v3
-            ver, idx, st, pv, dec, rounds, alpha = leaves
+        if len(leaves) == 8:                    # v4: source identity
+            ver, idx, st, pv, dec, rounds, alpha, uids = leaves
             if int(ver) != CKPT_VERSION:
                 raise ValueError(
                     f"checkpoint {path} declares version {int(ver)}; "
-                    f"this build reads v1/v2/v{CKPT_VERSION}")
+                    f"this build reads v1/v2/v3/v{CKPT_VERSION}")
+            dec = np.asarray(dec, np.int8)
+            alpha = float(alpha)
+            uids = np.asarray(uids)
+            return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
+                       np.atleast_2d(pv), dec if dec.size else None,
+                       int(rounds),
+                       None if np.isnan(alpha) else alpha,
+                       uids if uids.size else None, CKPT_VERSION)
+        if len(leaves) == 7:                    # v3: no source identity
+            ver, idx, st, pv, dec, rounds, alpha = leaves
+            if int(ver) != 3:
+                raise ValueError(
+                    f"checkpoint {path} declares version {int(ver)} in a "
+                    f"7-leaf (v3) layout; this build reads v1/v2/v3/"
+                    f"v{CKPT_VERSION}")
             dec = np.asarray(dec, np.int8)
             alpha = float(alpha)
             return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
                        np.atleast_2d(pv), dec if dec.size else None,
                        int(rounds),
-                       None if np.isnan(alpha) else alpha, CKPT_VERSION)
+                       None if np.isnan(alpha) else alpha, None, 3)
         if len(leaves) == 5:                    # v2: verdict state present
             idx, st, pv, dec, rounds = leaves
             return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
                        np.atleast_2d(pv),
                        np.atleast_1d(np.asarray(dec, np.int8)),
-                       int(rounds), None, 2)
+                       int(rounds), None, None, 2)
         if len(leaves) == 3:                    # v1: classic results-only
             idx, st, pv = leaves
             return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
-                       np.atleast_2d(pv), None, 0, None, 1)
+                       np.atleast_2d(pv), None, 0, None, None, 1)
         raise ValueError(
             f"checkpoint {path} has {len(leaves)} leaves; expected 3 (v1), "
-            f"5 (v2) or 7 (v{CKPT_VERSION})")
+            f"5 (v2), 7 (v3) or 8 (v{CKPT_VERSION})")
 
     def save(self, path: str) -> None:
-        """Write the v3 layout (whatever version was loaded)."""
+        """Write the v4 layout (whatever version was loaded)."""
         dec = (np.zeros((0,), np.int8) if self.decisions is None
                else np.asarray(self.decisions, np.int8))
+        uids = (np.zeros((0,), "S1") if self.source_uids is None
+                else np.asarray(self.source_uids))
         ckpt_io.save(path, [
             np.int64(CKPT_VERSION), np.asarray(self.job_idx, np.int32),
             np.atleast_2d(np.asarray(self.stats, np.float64)),
             np.atleast_2d(np.asarray(self.ps, np.float64)),
             dec, np.int64(self.rounds_run),
-            np.float64(np.nan if self.alpha is None else self.alpha)])
+            np.float64(np.nan if self.alpha is None else self.alpha),
+            uids])
 
     def drop(self, job_ids) -> "Checkpoint":
         """A copy with the given jobs knocked out (simulated node loss /
@@ -340,10 +401,17 @@ class CampaignSpec:
     of a cell reads words ``[s * span, ...)`` of every job's sequence);
     ``None`` derives the smallest power-of-two span that keeps every
     job's block of the largest wave inside its own stream. More than one
-    stream requires every generator to be offset-continuable
-    (``COUNTER_BASED`` — mwc is refused up front, not at dispatch)."""
+    stream requires every source to be offset-continuable
+    (``counter_based`` — mwc is refused up front, not at dispatch).
+
+    ``sources`` is the BitSource spelling of the fleet (mirrors
+    ``RunSpec.sources``): BitSource objects or declarative specs,
+    captured files included — a campaign can screen a nonce dump's
+    sub-streams next to in-repo generators. ``generators=`` remains the
+    back-compat spelling; after construction both fields are populated
+    (``generators`` holds reporting names)."""
     battery: str
-    generators: Tuple[str, ...]
+    generators: Tuple[str, ...] = ()
     n_streams: int = 1
     seed: int = 0
     waves: Tuple[float, ...] = (0.25, 1.0)
@@ -355,26 +423,32 @@ class CampaignSpec:
     span: Optional[int] = None
     ledger_path: Optional[str] = None
     progress: bool = False
+    sources: Optional[Tuple] = None
 
     def __post_init__(self):
         if self.battery not in BATTERY_SIZES:
             raise KeyError(f"unknown battery {self.battery!r}; "
                            f"known: {sorted(BATTERY_SIZES)}")
-        gens = ((self.generators,) if isinstance(self.generators, str)
-                else tuple(self.generators))
+        if self.sources is not None:
+            given = (self.sources if isinstance(self.sources, (tuple, list))
+                     else (self.sources,))
+            srcs = tuple(resolve_source(s) for s in given)
+            gens = tuple(s.name for s in srcs)
+        else:
+            gens = ((self.generators,) if isinstance(self.generators, str)
+                    else tuple(self.generators))
+            srcs = tuple(resolve_source(g) for g in gens)
         if not gens:
-            raise ValueError("a campaign needs at least one generator")
+            raise ValueError("a campaign needs at least one generator "
+                             "(or source)")
         if len(set(gens)) != len(gens):
             raise ValueError(f"duplicate generators in {gens}")
-        for g in gens:
-            if g not in GEN_IDS:
-                raise KeyError(f"unknown generator {g!r}; "
-                               f"known: {sorted(GEN_IDS)}")
         object.__setattr__(self, "generators", gens)
+        object.__setattr__(self, "sources", srcs)
         if self.n_streams < 1:
             raise ValueError(f"n_streams must be >= 1, got {self.n_streams}")
         if self.n_streams > 1:
-            bad = [g for g in gens if g not in COUNTER_BASED]
+            bad = [s.name for s in srcs if not s.counter_based]
             if bad:
                 raise ValueError(
                     f"stream grids need offset-continuable generators; "
@@ -400,6 +474,14 @@ class CampaignSpec:
                 for s in range(self.n_streams)]
 
     @property
+    def cell_sources(self) -> List[Tuple[BitSource, int]]:
+        """Grid cells in ledger order as (BitSource, stream) pairs — the
+        source-resolved twin of ``cells`` the phase driver builds its
+        ``RunSpec.sources`` from."""
+        return [(src, s) for src in self.sources
+                for s in range(self.n_streams)]
+
+    @property
     def n_cells(self) -> int:
         """Grid size: generators x streams."""
         return len(self.generators) * self.n_streams
@@ -407,7 +489,11 @@ class CampaignSpec:
     def digest(self) -> int:
         """Deterministic uint64 identity of everything the campaign's
         DECISIONS depend on — battery, grid, seed, waves, alpha, policy,
-        stream_check, span. Stored in the ledger so a resume against a
+        stream_check, span, and (for captured sources) the FILE CONTENT
+        each cell screens: a re-captured file is a different campaign
+        and refuses the old ledger. Generator-only campaigns fold
+        exactly the pre-BitSource key, so their stored ledger digests
+        still match. Stored in the ledger so a resume against a
         reconfigured campaign is refused instead of silently replaying
         decisions made under different settings. ``backend`` is
         deliberately excluded: both backends are parity-asserted to
@@ -415,14 +501,18 @@ class CampaignSpec:
         may move between reference and accelerated hosts."""
         import hashlib
         policy = get_policy(self.policy)
-        key = repr((self.battery, self.generators, self.n_streams,
-                    self.seed, self.waves, self.alpha, policy.name,
-                    policy.signature(), self.stream_check, self.span))
+        parts = (self.battery, self.generators, self.n_streams,
+                 self.seed, self.waves, self.alpha, policy.name,
+                 policy.signature(), self.stream_check, self.span)
+        captured = tuple(s.uid() for s in self.sources if s.captured)
+        if captured:
+            parts = parts + (captured,)
+        key = repr(parts)
         return int.from_bytes(
             hashlib.sha256(key.encode()).digest()[:8], "big")
 
 
-CAMPAIGN_LEDGER_VERSION = 1
+CAMPAIGN_LEDGER_VERSION = 2
 
 # cell decision codes shared by the ledger and the campaign driver
 # (0/1/2 match BatteryRun._DECISION_CODE; the phase axis is the ledger's)
@@ -437,12 +527,18 @@ class CampaignLedger:
     is a pure function of the grid, so a ledger survives re-ordering of
     waves and resumes on any pool width.
 
-    Wire layout (``ckpt/io`` leaves)::
+    Wire layouts (``ckpt/io`` leaves)::
 
-      [version, gen_ids (C,) int32, streams (C,) int32,
-       decisions (C,) int8, decided_phase (C,) int8 (-1 = undecided),
-       phases_done, alpha, spec_digest uint64]
+      v2 (written): [version, gen_ids (C,) int32, streams (C,) int32,
+                     decisions (C,) int8, decided_phase (C,) int8
+                     (-1 = undecided), phases_done, alpha,
+                     spec_digest uint64, source_uids (C,) bytes]
+      v1 (read):    v2 without the trailing source_uids leaf
 
+    A v1 ledger loads transparently; the next save upgrades it to v2.
+    ``source_uids`` pins each cell's BitSource identity
+    (``BitSource.uid()``; captured cells carry ``gen_id`` -1 plus a
+    content-bearing uid, so a re-captured file refuses the ledger).
     ``decisions`` carries ``CELL_UNDECIDED/CELL_PASS/CELL_FAIL``;
     ``decided_phase`` records WHICH phase decided the cell (0 = stream
     check when enabled, then the waves in ascending-scale order).
@@ -460,38 +556,69 @@ class CampaignLedger:
     phases_done: int = 0
     alpha: Optional[float] = None
     spec_digest: int = 0
+    source_uids: Optional[np.ndarray] = None    # (C,) bytes BitSource.uid
     version: int = CAMPAIGN_LEDGER_VERSION
+
+    @staticmethod
+    def _want_ids(spec: CampaignSpec):
+        """The spec's grid as ledger columns: per-cell gen_id (-1 for a
+        captured cell — it holds no switch lane) and stream index."""
+        gids = [(-1 if src.captured else src.gen_id)
+                for src, _ in spec.cell_sources]
+        return (np.asarray(gids, np.int32),
+                np.asarray([s for _, s in spec.cell_sources], np.int32))
 
     @classmethod
     def fresh(cls, spec: CampaignSpec) -> "CampaignLedger":
         """An all-undecided ledger for the spec's grid."""
         c = spec.n_cells
-        return cls(
-            np.asarray([GEN_IDS[g] for g, _ in spec.cells], np.int32),
-            np.asarray([s for _, s in spec.cells], np.int32),
-            np.zeros((c,), np.int8), np.full((c,), -1, np.int8),
-            0, spec.alpha, spec.digest())
+        gids, streams = cls._want_ids(spec)
+        uids = np.asarray([src.uid().encode()
+                           for src, _ in spec.cell_sources])
+        return cls(gids, streams,
+                   np.zeros((c,), np.int8), np.full((c,), -1, np.int8),
+                   0, spec.alpha, spec.digest(), uids)
 
     @classmethod
     def load(cls, path: str) -> "CampaignLedger":
-        """Read (and version-check) a ledger file."""
+        """Read (and version-check) a v1 or v2 ledger file."""
         leaves = ckpt_io.load_flat(path)
-        if len(leaves) != 8:
-            raise ValueError(f"campaign ledger {path} has {len(leaves)} "
-                             "leaves; expected 8")
-        ver, gids, streams, dec, phase, done, alpha, digest = leaves
-        if int(ver) != CAMPAIGN_LEDGER_VERSION:
-            raise ValueError(
-                f"campaign ledger {path} declares version {int(ver)}; "
-                f"this build reads v{CAMPAIGN_LEDGER_VERSION}")
-        alpha = float(alpha)
-        return cls(np.asarray(gids, np.int32), np.asarray(streams, np.int32),
-                   np.asarray(dec, np.int8), np.asarray(phase, np.int8),
-                   int(done), None if np.isnan(alpha) else alpha,
-                   int(np.uint64(digest)))
+        if len(leaves) == 9:                    # v2: source identity
+            ver, gids, streams, dec, phase, done, alpha, digest, uids = leaves
+            if int(ver) != CAMPAIGN_LEDGER_VERSION:
+                raise ValueError(
+                    f"campaign ledger {path} declares version {int(ver)} "
+                    f"in a 9-leaf layout; this build reads "
+                    f"v1/v{CAMPAIGN_LEDGER_VERSION}")
+            uids = np.asarray(uids)
+            alpha = float(alpha)
+            return cls(np.asarray(gids, np.int32),
+                       np.asarray(streams, np.int32),
+                       np.asarray(dec, np.int8), np.asarray(phase, np.int8),
+                       int(done), None if np.isnan(alpha) else alpha,
+                       int(np.uint64(digest)),
+                       uids if uids.size else None,
+                       CAMPAIGN_LEDGER_VERSION)
+        if len(leaves) == 8:                    # v1: no source identity
+            ver, gids, streams, dec, phase, done, alpha, digest = leaves
+            if int(ver) != 1:
+                raise ValueError(
+                    f"campaign ledger {path} declares version {int(ver)} "
+                    f"in an 8-leaf (v1) layout; this build reads "
+                    f"v1/v{CAMPAIGN_LEDGER_VERSION}")
+            alpha = float(alpha)
+            return cls(np.asarray(gids, np.int32),
+                       np.asarray(streams, np.int32),
+                       np.asarray(dec, np.int8), np.asarray(phase, np.int8),
+                       int(done), None if np.isnan(alpha) else alpha,
+                       int(np.uint64(digest)), None, 1)
+        raise ValueError(f"campaign ledger {path} has {len(leaves)} "
+                         "leaves; expected 8 (v1) or 9 (v2)")
 
     def save(self, path: str) -> None:
-        """Write the 8-leaf cell-keyed wire layout (atomic)."""
+        """Write the 9-leaf v2 cell-keyed wire layout (atomic)."""
+        uids = (np.zeros((0,), "S1") if self.source_uids is None
+                else np.asarray(self.source_uids))
         ckpt_io.save(path, [
             np.int64(CAMPAIGN_LEDGER_VERSION),
             np.asarray(self.gen_ids, np.int32),
@@ -500,16 +627,24 @@ class CampaignLedger:
             np.asarray(self.decided_phase, np.int8),
             np.int64(self.phases_done),
             np.float64(np.nan if self.alpha is None else self.alpha),
-            np.uint64(self.spec_digest)])
+            np.uint64(self.spec_digest), uids])
 
     def matches(self, spec: CampaignSpec) -> bool:
         """Does this ledger describe exactly this campaign — same cells
         in the same order AND the same decision-relevant configuration
         (``CampaignSpec.digest``: battery, waves, seed, alpha, policy,
-        stream_check, span)? A resumed campaign refuses otherwise — cell
-        decisions are only meaningful for the campaign that made them."""
-        want_g = np.asarray([GEN_IDS[g] for g, _ in spec.cells], np.int32)
-        want_s = np.asarray([s for _, s in spec.cells], np.int32)
+        stream_check, span, captured-file content)? A resumed campaign
+        refuses otherwise — cell decisions are only meaningful for the
+        campaign that made them. A v1 ledger (no stored uids) matches on
+        the pre-BitSource columns alone; captured cells always carry
+        uids, so the digest still refuses re-captured files."""
+        want_g, want_s = self._want_ids(spec)
+        if self.source_uids is not None:
+            want_u = np.asarray([src.uid().encode()
+                                 for src, _ in spec.cell_sources])
+            uids = np.asarray(self.source_uids)
+            if uids.shape != want_u.shape or not bool(np.all(uids == want_u)):
+                return False
         return (self.gen_ids.shape == want_g.shape
                 and bool(np.all(self.gen_ids == want_g))
                 and bool(np.all(self.streams == want_s))
@@ -533,7 +668,7 @@ class _Compiled:
     jobs: List[TestEntry]           # possibly decomposed (job space)
     costs: List[float]
     combine: str
-    runners: dict                   # (n_workers, n_generators) -> jitted fn
+    runners: dict       # (n_workers, G, grid, captured, lanes) -> jitted fn
 
 
 class PoolSession:
@@ -629,7 +764,8 @@ class PoolSession:
             self._cache[key] = hit
         return hit
 
-    def _runner(self, spec: RunSpec, n_gens: Optional[int] = None):
+    def _runner(self, spec: RunSpec, n_gens: Optional[int] = None,
+                captured: bool = False):
         """The jitted round program for this spec's shape: the current
         pool width x G generators. ``n_gens`` overrides the spec's width —
         adaptive runs shrink the vmapped gen_ids axis as failed generators
@@ -637,20 +773,45 @@ class PoolSession:
         so resizing back to a width seen before recompiles nothing.
         Specs carrying ``offsets`` compile the grid runner (the offset is
         a runtime argument, so ONE executable serves every cell offset of
-        a campaign — wave after wave, knockout after knockout)."""
+        a campaign — wave after wave, knockout after knockout).
+
+        Runner slots also carry the SWITCH WIDTH an executable was traced
+        at: a ``lax.switch`` clamps out-of-range indices, so dispatching
+        a later-registered generator through a narrower switch would
+        silently run the wrong lane. ``spec.switch_lanes`` states the
+        width this dispatch needs; any cached executable at least that
+        wide is reused (registering a 10th generator retraces NOTHING for
+        the built-in nine), a wider need compiles a fresh, wider switch.
+        ``captured=True`` selects the prefetched-buffer program
+        (``make_external_runner``) — no generator switch at all."""
         key = self.cache_key(spec)
         compiled = self._compiled(spec)
         g = spec.n_generators if n_gens is None else n_gens
-        grid = spec.offsets is not None
-        rk = (self.n_workers, g, grid)
+        grid = spec.offsets is not None and not captured
+        need = 0 if captured else spec.switch_lanes
+        rk = (self.n_workers, g, grid, captured, need)
         runner = compiled.runners.get(rk)
+        if runner is None:
+            for (w, gg, gr, cap, lanes), r in compiled.runners.items():
+                if ((w, gg, gr, cap) == (self.n_workers, g, grid, captured)
+                        and lanes >= need):
+                    runner = r
+                    break
         if runner is None:
             def on_trace():
                 self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
-            make = (make_grid_runner if grid
-                    else make_round_runner if g == 1 else make_fanout_runner)
-            runner = make(compiled.jobs, self.mesh, on_trace=on_trace)
-            compiled.runners[rk] = runner
+            if captured:
+                runner = make_external_runner(compiled.jobs, self.mesh,
+                                              on_trace=on_trace)
+                lanes = 0
+            else:
+                make = (make_grid_runner if grid
+                        else make_round_runner if g == 1
+                        else make_fanout_runner)
+                runner = make(compiled.jobs, self.mesh, on_trace=on_trace)
+                lanes = registry_size()     # the switch traced THIS wide
+            compiled.runners[(self.n_workers, g, grid, captured, lanes)] \
+                = runner
         return runner
 
     def entries(self, spec: RunSpec) -> List[TestEntry]:
@@ -973,37 +1134,60 @@ class BatteryRun:
         return n - len(undone)
 
     def _dispatch(self, row: np.ndarray) -> None:
-        """One device dispatch covering the ACTIVE generators. When early
-        stopping has decided some of a fan-out's generators, the dispatch
-        shrinks to the survivors — the vmapped gen_ids axis narrows, the
-        failed generator's remaining tests are never executed."""
+        """One round's dispatches covering the ACTIVE generators. When
+        early stopping has decided some of a fan-out's generators, the
+        dispatch shrinks to the survivors — the vmapped gen_ids axis
+        narrows, the failed generator's remaining tests are never
+        executed. Positions backed by a ``CapturedSource`` dispatch
+        through the prefetched-buffer program (their bits are gathered
+        host-side from the memory-mapped capture), switch-backed
+        positions through the classic generator switch — at most one
+        device dispatch per family per round."""
         active = self._active()
         if not active:
             return
-        runner = self.session._runner(self.spec, n_gens=len(active))
-        if self.spec.offsets is not None:
-            seeds = np.asarray([self.spec.seeds[g] for g in active],
-                               np.int32)
-            gids = np.asarray([GEN_IDS[self.spec.generators[g]]
-                               for g in active], np.int32)
-            offs = np.asarray([self.spec.offsets[g] for g in active],
-                              np.int64)
-            stats, ps = runner(row, seeds, gids, offs)
+        srcs = self.spec.sources
+        switched = [g for g in active if not srcs[g].captured]
+        captured = [g for g in active if srcs[g].captured]
+        per_gen = []
+        if switched:
+            runner = self.session._runner(self.spec, n_gens=len(switched))
+            if self.spec.offsets is not None:
+                seeds = np.asarray([self.spec.seeds[g] for g in switched],
+                                   np.int32)
+                gids = np.asarray([srcs[g].gen_id for g in switched],
+                                  np.int32)
+                offs = np.asarray([self.spec.offsets[g] for g in switched],
+                                  np.int64)
+                stats, ps = runner(row, seeds, gids, offs)
+                stats, ps = np.asarray(stats), np.asarray(ps)
+                per_gen += [(g, stats[a], ps[a])
+                            for a, g in enumerate(switched)]
+            elif len(switched) == 1:
+                g0 = switched[0]
+                stats, ps = runner(row, np.int32(self.spec.seeds[g0]),
+                                   np.int32(srcs[g0].gen_id))
+                per_gen.append((g0, np.asarray(stats), np.asarray(ps)))
+            else:
+                seeds = np.asarray([self.spec.seeds[g] for g in switched],
+                                   np.int32)
+                gids = np.asarray([srcs[g].gen_id for g in switched],
+                                  np.int32)
+                stats, ps = runner(row, seeds, gids)
+                stats, ps = np.asarray(stats), np.asarray(ps)
+                per_gen += [(g, stats[a], ps[a])
+                            for a, g in enumerate(switched)]
+        if captured:
+            runner = self.session._runner(self.spec, n_gens=len(captured),
+                                          captured=True)
+            lanes = [(srcs[g], self.spec.seeds[g],
+                      None if self.spec.offsets is None
+                      else self.spec.offsets[g]) for g in captured]
+            bits = gather_captured_bits(self._compiled.jobs, row, lanes)
+            stats, ps = runner(row, bits)
             stats, ps = np.asarray(stats), np.asarray(ps)
-            per_gen = [(g, stats[a], ps[a]) for a, g in enumerate(active)]
-        elif len(active) == 1:
-            g0 = active[0]
-            stats, ps = runner(row, np.int32(self.spec.seeds[g0]),
-                               np.int32(GEN_IDS[self.spec.generators[g0]]))
-            per_gen = [(g0, np.asarray(stats), np.asarray(ps))]
-        else:
-            seeds = np.asarray([self.spec.seeds[g] for g in active],
-                               np.int32)
-            gids = np.asarray([GEN_IDS[self.spec.generators[g]]
-                               for g in active], np.int32)
-            stats, ps = runner(row, seeds, gids)
-            stats, ps = np.asarray(stats), np.asarray(ps)
-            per_gen = [(g, stats[a], ps[a]) for a, g in enumerate(active)]
+            per_gen += [(g, stats[a], ps[a])
+                        for a, g in enumerate(captured)]
         for g, st, pv in per_gen:
             self._results[g] = stitch.fold(row[None, :], st[None, :],
                                            pv[None, :], self._results[g])
@@ -1030,8 +1214,9 @@ class BatteryRun:
                        for r in self._results], np.float64)
         decisions = np.array([self._DECISION_CODE[v.decision]
                               for v in self._verdicts], np.int8)
+        uids = np.asarray([s.uid().encode() for s in self.spec.sources])
         Checkpoint(idx, st, pv, decisions, self.rounds_run,
-                   alpha=self.spec.alpha).save(path)
+                   alpha=self.spec.alpha, source_uids=uids).save(path)
 
     def _load_checkpoint(self) -> None:
         path = self.spec.checkpoint_path
@@ -1055,6 +1240,16 @@ class BatteryRun:
             raise ValueError(
                 f"checkpoint {path} holds {ck.n_generators} generator "
                 f"row(s), spec has {self.spec.n_generators}")
+        if ck.source_uids is not None:
+            saved = [u.decode() for u in np.asarray(ck.source_uids)]
+            want = [s.uid() for s in self.spec.sources]
+            if saved != want:
+                raise ValueError(
+                    f"checkpoint {path} was written against sources "
+                    f"{saved}, spec names {want} — for a captured source "
+                    f"the uid embeds the file's content digest, so a "
+                    f"re-captured (byte-different) file must re-run, "
+                    f"never resume")
         if len(ck.job_idx) and int(np.max(ck.job_idx)) >= len(self._compiled.jobs):
             raise ValueError(
                 f"checkpoint {path} references job {int(np.max(ck.job_idx))} "

@@ -237,7 +237,7 @@ class Campaign:
         if phase.offset_rule == "seam":
             pair_words = max_words(
                 build_battery(phase.battery, phase.scale)) // 2
-        gens = [self.spec.generators[g // self.spec.n_streams]
+        srcs = [self.spec.sources[g // self.spec.n_streams]
                 for g in [grp[0] for grp in groups]]
         offs = [self._cell_offset(phase, grp, pair_words) for grp in groups]
         # pad the cell axis to its power-of-two bucket (repeat cell 0;
@@ -246,11 +246,11 @@ class Campaign:
         # is the same rounding rule generation uses
         n_real = len(groups)
         pad = word_bucket(max(n_real, 1)) - n_real
-        gens += [gens[0]] * pad
+        srcs += [srcs[0]] * pad
         offs += [offs[0]] * pad
         ck = (f"{self.spec.ledger_path}.phase{k}"
               if self.spec.ledger_path else None)
-        spec = RunSpec(phase.battery, generators=tuple(gens),
+        spec = RunSpec(phase.battery, sources=tuple(srcs),
                        seeds=(self.spec.seed,), scale=phase.scale,
                        policy=self.spec.policy, retry=self.spec.retry,
                        alpha=self.spec.alpha,

@@ -42,7 +42,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.common.compat import shard_map, under_x64
 from repro.core.battery import TestEntry
-from repro.rng.generators import gen_block_by_id, x64
+from repro.rng.generators import x64
+from repro.rng.sources import switch_block
 
 
 def word_bucket(n: int) -> int:
@@ -95,13 +96,31 @@ def stream_table(entries: List[TestEntry]) -> np.ndarray:
                       np.int32)
 
 
-def _job_fn(entries: List[TestEntry], with_offset: bool = False):
+def _kernels(entries: List[TestEntry]):
+    """The uniform kernel switch table: every test as ``bits ->
+    (float32 stat, float32 p)`` — shared by the generator-switch job and
+    the captured-buffer job so both dispatch paths score bits
+    identically (the ingest parity guarantee)."""
+    return [lambda bits, e=e: tuple(
+        jnp.asarray(v, jnp.float32) for v in e.kernel(bits))
+        for e in entries]
+
+
+def _job_fn(entries: List[TestEntry], with_offset: bool = False,
+            block_provider: Optional[Callable] = None):
     """(job_id, seed, gen_id[, offset]) -> (stat, p). job_id == -1 -> idle.
 
     ``with_offset=True`` adds a runtime stream-offset argument routed to
     the generator switch (campaign grids, ``make_grid_runner``); the
     default path traces exactly the classic three-argument job, so
     existing executables and trace counts are untouched.
+
+    ``block_provider`` is the abstract bit-supply seam: any
+    ``(gen_id, seed, stream, n[, offset]) -> uint32[n]`` traceable
+    callable; the default is the registry-backed ``sources.switch_block``
+    (the historical ``gen_block_by_id``). Captured sources never pass
+    through here — they enter as prefetched buffers via
+    ``make_external_runner``/``gather_captured_bits``.
 
     Generation is BUCKETED: jobs are grouped into power-of-two word
     buckets (``bucket_table``) and an inner ``lax.switch`` generates
@@ -116,9 +135,8 @@ def _job_fn(entries: List[TestEntry], with_offset: bool = False):
     kernel switch. Both the cond predicate and the switch indices are
     per-shard scalars, so the branches survive the fan-out vmap over
     generators as real branches, not selects."""
-    kernels = [lambda bits, e=e: tuple(
-        jnp.asarray(v, jnp.float32) for v in e.kernel(bits))
-        for e in entries]
+    provider = switch_block if block_provider is None else block_provider
+    kernels = _kernels(entries)
     streams = jnp.asarray(stream_table(entries))
     sizes, bids = bucket_table(entries)
     bucket_ids = jnp.asarray(bids)
@@ -127,7 +145,7 @@ def _job_fn(entries: List[TestEntry], with_offset: bool = False):
     def gen_branch(nb):
         def gen(seed, gen_id, stream, offset=None):
             with x64():
-                block = gen_block_by_id(gen_id, seed, stream, nb, offset)
+                block = provider(gen_id, seed, stream, nb, offset)
             if nb < n_max:
                 block = jnp.concatenate(
                     [block, jnp.zeros((n_max - nb,), jnp.uint32)])
@@ -169,9 +187,10 @@ def _job_fn(entries: List[TestEntry], with_offset: bool = False):
 
 
 def make_round_runner(entries: List[TestEntry], mesh,
-                      on_trace: Optional[Callable[[], None]] = None):
+                      on_trace: Optional[Callable[[], None]] = None,
+                      block_provider: Optional[Callable] = None):
     """Compiled fn: (round_assignment (W,), seed, gen_id) -> stats, ps (W,)."""
-    job = _job_fn(entries)
+    job = _job_fn(entries, block_provider=block_provider)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(P("workers"), P(), P()),
@@ -186,11 +205,12 @@ def make_round_runner(entries: List[TestEntry], mesh,
 
 
 def make_fanout_runner(entries: List[TestEntry], mesh,
-                       on_trace: Optional[Callable[[], None]] = None):
+                       on_trace: Optional[Callable[[], None]] = None,
+                       block_provider: Optional[Callable] = None):
     """Multi-generator round: (round_assignment (W,), seeds (G,),
     gen_ids (G,)) -> stats, ps (G, W). The job is vmapped over the
     generator axis, so G generators are assessed in one device dispatch."""
-    job = _job_fn(entries)
+    job = _job_fn(entries, block_provider=block_provider)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(P("workers"), P(), P()),
@@ -205,14 +225,15 @@ def make_fanout_runner(entries: List[TestEntry], mesh,
 
 
 def make_grid_runner(entries: List[TestEntry], mesh,
-                     on_trace: Optional[Callable[[], None]] = None):
+                     on_trace: Optional[Callable[[], None]] = None,
+                     block_provider: Optional[Callable] = None):
     """Campaign-grid round: (round_assignment (W,), seeds (G,),
     gen_ids (G,), offsets (G,)) -> stats, ps (G, W). Like the fan-out
     runner but each lane of the vmapped cell axis also carries a runtime
     stream offset, so one executable serves every (generator, sub-stream)
     cell of a screening grid — wave after wave, knockout after knockout,
     no retrace (DESIGN.md §8)."""
-    job = _job_fn(entries, with_offset=True)
+    job = _job_fn(entries, with_offset=True, block_provider=block_provider)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(P("workers"), P(), P(), P()),
@@ -225,6 +246,77 @@ def make_grid_runner(entries: List[TestEntry], mesh,
         return stat[:, None], p[:, None]
 
     return under_x64(jax.jit(round_fn))
+
+
+def _external_job_fn(entries: List[TestEntry]):
+    """(job_id, bits (n_max,)) -> (stat, p) — the captured-buffer twin of
+    ``_job_fn``: no generator switch at all, the block arrives prefetched
+    (``gather_captured_bits``). The kernel table, idle sentinel and
+    clip-then-switch job routing are IDENTICAL to the generator path, so
+    the same bits score the same p-values whichever door they enter by."""
+    kernels = _kernels(entries)
+
+    def run(job_id, bits):
+        def idle(_):
+            return jnp.float32(0.0), jnp.float32(jnp.nan)
+
+        def work(bits):
+            j = jnp.clip(job_id, 0, len(entries) - 1)
+            return jax.lax.switch(j, kernels, bits)
+
+        return jax.lax.cond(job_id < 0, idle, work, bits)
+
+    return run
+
+
+def make_external_runner(entries: List[TestEntry], mesh,
+                         on_trace: Optional[Callable[[], None]] = None):
+    """Captured-source round: (round_assignment (W,), bits (L, W, n_max))
+    -> stats, ps (L, W). The lane axis L plays the role the ``gen_ids``
+    axis plays in ``make_fanout_runner`` — one (source, seed, offset)
+    cell per lane — but the bits are HOST-PREFETCHED buffers sharded over
+    workers, not switch lanes: external bitstreams never join (or widen)
+    the compiled generator switch, so screening a nonce dump can never
+    retrace a generator battery and vice versa."""
+    job = _external_job_fn(entries)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P("workers"), P(None, "workers", None)),
+        out_specs=(P(None, "workers"), P(None, "workers")), check_vma=False)
+    def round_fn(jobs, bits):
+        if on_trace is not None:
+            on_trace()
+        stat, p = jax.vmap(lambda b: job(jobs[0], b))(bits[:, 0, :])
+        return stat[:, None], p[:, None]
+
+    return under_x64(jax.jit(round_fn))
+
+
+def gather_captured_bits(entries: List[TestEntry], jobs, lanes) -> np.ndarray:
+    """Host-side prefetch for ``make_external_runner``: a (L, W, n_max)
+    uint32 buffer where slot ``[l, w]`` holds worker w's job block read
+    from lane l's captured source — each job reads its power-of-two
+    BUCKET (``bucket_table``) starting at the job's stream-table word
+    offset within the lane's sub-stream, zero-padded to the widest
+    bucket. Bucket sizing, stream ids and padding mirror ``_job_fn``
+    exactly; that mirroring is what makes captured-vs-generator parity
+    bitwise rather than approximate. ``lanes`` is a sequence of
+    ``(source, seed, offset)`` cells (offset ``None`` = the canonical
+    "no offset"); idle slots (job -1) stay zero and are never read."""
+    streams = stream_table(entries)
+    sizes, bids = bucket_table(entries)
+    n_max = sizes[-1] if sizes else 0
+    jobs = np.asarray(jobs, np.int64)
+    out = np.zeros((len(lanes), len(jobs), n_max), np.uint32)
+    for li, (source, seed, offset) in enumerate(lanes):
+        for wi, j in enumerate(jobs):
+            if j < 0:
+                continue
+            nb = sizes[bids[j]]
+            out[li, wi, :nb] = source.block(seed, int(streams[j]), nb,
+                                            offset)
+    return out
 
 
 def make_batch_runner(entries: List[TestEntry], mesh):

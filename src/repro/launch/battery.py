@@ -11,6 +11,15 @@ flattened device mesh. Checkpoints progress per round; re-running the same
 command resumes (only missing tests execute). ``--json PATH`` writes a
 machine-readable report next to the text one.
 
+``--source file:PATH[:fmt]`` screens a CAPTURED bitstream (a file of
+raw uint32 words, ``fmt`` ``npy`` or ``u32``) through the same battery
+machinery: the file becomes a ``CapturedSource`` position riding
+alongside any ``--gen`` positions, its verdict bitwise what the
+in-repo generator of the same bits would earn. ``--register
+PKG.MOD:FN`` imports and calls a registration hook before the run, so
+external generators (``repro.rng.sources.register_generator``) are
+valid ``--gen`` names — the plugin seam of DESIGN.md §11.
+
 ``--adaptive`` switches to the early-stopping execution mode: the
 adaptive schedule policy front-loads cheap discriminating tests, the
 sequential verdict engine (alpha from ``--alpha``) decides
@@ -61,9 +70,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--battery", default="smallcrush",
                     choices=["smallcrush", "crush", "bigcrush"])
-    ap.add_argument("--gen", default="splitmix64",
+    ap.add_argument("--gen", default=None,
                     help="generator name, or comma-separated list for "
-                         "multi-generator fan-out in one dispatch")
+                         "multi-generator fan-out in one dispatch "
+                         "(default: splitmix64 when no --source is given)")
+    ap.add_argument("--source", action="append", default=None,
+                    metavar="file:PATH[:FMT]",
+                    help="screen a captured bitstream: file:PATH[:fmt], "
+                         "fmt 'npy' (uint32 array, 2-D = one stream per "
+                         "row) or 'u32' (raw little-endian words); "
+                         "repeatable — each file rides alongside the "
+                         "--gen positions in the same dispatch")
+    ap.add_argument("--register", action="append", default=None,
+                    metavar="PKG.MOD:FN",
+                    help="import PKG.MOD and call FN() before the run; "
+                         "the hook registers external generators via "
+                         "repro.rng.sources.register_generator, making "
+                         "them valid --gen names")
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--workers", type=int, default=0,
@@ -174,7 +197,26 @@ def main():
 
     from repro.stats import backends as kernel_backends  # noqa: E402
 
-    gens = tuple(g.strip() for g in args.gen.split(",") if g.strip())
+    # external-generator hooks run BEFORE any spec resolves names, so a
+    # --gen entry a hook registers is indistinguishable from a built-in
+    if args.register:
+        import importlib                              # noqa: E402
+        for hook in args.register:
+            mod_name, sep, fn_name = hook.partition(":")
+            if not sep or not mod_name or not fn_name:
+                ap.error(f"--register wants PKG.MOD:FN, got {hook!r}")
+            try:
+                fn = getattr(importlib.import_module(mod_name), fn_name)
+            except (ImportError, AttributeError) as exc:
+                ap.error(f"--register {hook!r}: {exc}")
+            fn()
+
+    gens = (tuple(g.strip() for g in args.gen.split(",") if g.strip())
+            if args.gen else ())
+    source_specs = tuple(args.source or ())
+    if not gens and not source_specs:
+        gens = ("splitmix64",)
+    positions = gens + source_specs
     session = PoolSession(mesh=make_pool_mesh(args.workers or None))
 
     if args.campaign:
@@ -185,7 +227,7 @@ def main():
         waves = (tuple(float(w) for w in args.waves.split(","))
                  if args.waves else (args.scale,))
         cspec = CampaignSpec(
-            args.battery, generators=gens, n_streams=args.streams,
+            args.battery, sources=positions, n_streams=args.streams,
             seed=args.seed, waves=waves, alpha=args.alpha,
             policy=args.policy,
             retry=RetryPolicy(max_retries=args.retries),
@@ -193,7 +235,7 @@ def main():
             stream_check=args.stream_check, ledger_path=args.ledger,
             progress=True)
         campaign = Campaign(session, cspec)
-        print(f"campaign: {len(gens)} generator(s) x {args.streams} "
+        print(f"campaign: {len(cspec.generators)} source(s) x {args.streams} "
               f"stream(s) | battery={args.battery} waves={waves} "
               f"span={campaign.span} policy={args.policy} "
               f"backend={args.backend}")
@@ -212,6 +254,12 @@ def main():
                 "rounds_run": res.rounds_run,
                 "campaign": {
                     "n_streams": args.streams, "waves": list(waves),
+                    **({"sources": [
+                        {"spec": raw, "uid": src.uid()}
+                        for raw, src in zip(
+                            source_specs,
+                            cspec.sources[len(gens):])]}
+                       if args.source else {}),
                     "span": campaign.span,
                     "phases": res.phase_names,
                     "stream_check": args.stream_check,
@@ -235,15 +283,16 @@ def main():
         # error); undecided cells mean the screening did not finish
         sys.exit(0 if n_open == 0 else 1)
     launch_workers = session.n_workers          # width before any resize
-    spec = RunSpec(args.battery, generators=gens, seeds=(args.seed,),
+    spec = RunSpec(args.battery, sources=positions, seeds=(args.seed,),
                    scale=args.scale, policy=args.policy,
                    retry=RetryPolicy(max_retries=args.retries),
                    checkpoint_path=args.ckpt, progress=True,
                    alpha=args.alpha, stop_on_verdict=args.adaptive,
                    backend=args.backend)
+    names = spec.generators
     backend_resolved = kernel_backends.resolve(args.backend)
     print(f"pool: {session.n_workers} workers | battery={args.battery} "
-          f"gen={','.join(gens)} scale={args.scale} policy={args.policy} "
+          f"gen={','.join(names)} scale={args.scale} policy={args.policy} "
           f"backend={args.backend}"
           + (f"->{backend_resolved}" if args.backend == "auto" else "")
           + (f" adaptive(alpha={args.alpha})" if args.adaptive else ""))
@@ -255,18 +304,19 @@ def main():
         queue = SubmissionQueue(session=session,
                                 state_dir=args.serve_state,
                                 max_wait=args.serve_max_wait)
-        # one ticket per generator: independent clients whose compatible
-        # specs the admission batcher coalesces into shared dispatches
-        gen_specs = [RunSpec(args.battery, generators=(g,),
+        # one ticket per source position: independent clients whose
+        # compatible specs the admission batcher coalesces into shared
+        # dispatches
+        gen_specs = [RunSpec(args.battery, sources=(p,),
                              seeds=(args.seed,), scale=args.scale,
                              policy=args.policy,
                              retry=RetryPolicy(max_retries=args.retries),
                              alpha=args.alpha,
                              stop_on_verdict=args.adaptive,
-                             backend=args.backend) for g in gens]
+                             backend=args.backend) for p in positions]
         tickets = [queue.submit(s) for s in gen_specs]
         queue.drain()
-        runs = {g: t.result() for g, t in zip(gens, tickets)}
+        runs = {g: t.result() for g, t in zip(names, tickets)}
         resubmit = None
         if args.serve_resubmit:
             before = queue.dispatch_rounds
@@ -278,7 +328,7 @@ def main():
                         "cache_hits": rticket.cache_hits,
                         "done_at_submit": done_at_submit,
                         "dispatches_added": queue.dispatch_rounds - before}
-            print(f"  resubmit {gens[0]}: cache_hits="
+            print(f"  resubmit {names[0]}: cache_hits="
                   f"{rticket.cache_hits} dispatches_added="
                   f"{resubmit['dispatches_added']}")
         stats = queue.stats()
@@ -286,7 +336,7 @@ def main():
             "state": args.serve_state, "max_wait": args.serve_max_wait,
             "tickets": [{"ticket": t.id, "gen": g, "state": t.state,
                          "batch": t.batch_id, "cache_hits": t.cache_hits}
-                        for g, t in zip(gens, tickets)],
+                        for g, t in zip(names, tickets)],
             "batches": stats["batches"],
             "dispatch_rounds": stats["dispatch_rounds"],
             "cache": stats["cache"], "traces": stats["traces"],
@@ -311,7 +361,7 @@ def main():
                       f"round {handle.rounds_run}")
         res = handle.result()
         multi = isinstance(res, BatteryResult)
-        runs = res.runs if multi else {gens[0]: res}
+        runs = res.runs if multi else {names[0]: res}
         wall_s, rounds_run = res.wall_s, res.rounds_run
         retries_total = res.retries
     for run in runs.values():
@@ -338,6 +388,13 @@ def main():
         }
         if serve_info is not None:
             payload["serve"] = serve_info
+        if args.source:
+            # only present when --source was used: golden-key consumers
+            # of the classic payload see exactly the historical keys
+            payload["sources"] = [
+                {"spec": raw, "uid": src.uid()}
+                for raw, src in zip(source_specs,
+                                    spec.sources[len(gens):])]
         for gen, run in runs.items():
             tests = []
             for e in entries:

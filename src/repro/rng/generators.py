@@ -332,56 +332,46 @@ SCAN_REFERENCE: Dict[str, Callable] = {
 }
 
 
-GENERATORS: Dict[str, Callable] = {
-    "splitmix64": splitmix64_block,
-    "msweyl": msweyl_block,
-    "threefry": threefry_block,
-    "pcg32": pcg32_block,
-    "lcg64": lcg64_block,
-    "xorshift64s": xorshift64s_block,
-    "mwc": mwc_block,
-    "randu": randu_block,
-    "minstd": minstd_block,
-}
-GEN_IDS = {name: i for i, name in enumerate(GENERATORS)}
+# ---------------------------------------------------------------------------
+# the plugin registry (rng/sources.py): built-ins register here, in the
+# historical dict order so their stable gen_ids match every checkpoint,
+# ledger and cache digest minted before the BitSource layer existed.
+# GENERATORS / GEN_IDS are re-exported LIVE views (the same dict objects
+# sources.py mutates on register/unregister); gen_block_by_id is the
+# registry-backed switch. Counter-based: block(seed, stream, n, offset)
+# supports exact continuation — block(n=2k) == block(n=k) ++
+# block(n=k, offset=k) — the property that makes sequential-reuse mode
+# and over-decomposition exact. xorshift64s/randu/minstd joined via
+# jump-ahead cycle splitting; mwc's lag-1 carry chain has no cheap jump,
+# stays a sequential lax.scan, and takes no offset.
 
-# Counter-based generators: block(seed, stream, n, offset) supports exact
-# continuation — block(n=2k) == block(n=k) ++ block(n=k, offset=k) — the
-# property that makes sequential-reuse mode and over-decomposition exact.
-# xorshift64s/randu/minstd joined via jump-ahead cycle splitting (their
-# linear step maps admit a log-depth ladder). The complement is exactly
-# {mwc}: the lag-1 multiply-with-carry chain has no cheap jump, stays a
-# sequential lax.scan, and takes no offset.
-COUNTER_BASED = ("splitmix64", "msweyl", "threefry", "pcg32", "lcg64",
-                 "xorshift64s", "randu", "minstd")
+from repro.rng.sources import (  # noqa: E402
+    GENERATORS,
+    GEN_IDS,
+    register_generator,
+    switch_block as gen_block_by_id,
+)
+
+register_generator("splitmix64", splitmix64_block, counter_based=True)
+register_generator("msweyl", msweyl_block, counter_based=True)
+register_generator("threefry", threefry_block, counter_based=True)
+register_generator("pcg32", pcg32_block, counter_based=True)
+register_generator("lcg64", lcg64_block, counter_based=True)
+register_generator("xorshift64s", xorshift64s_block, counter_based=True)
+register_generator("mwc", mwc_block, counter_based=False)
+register_generator("randu", randu_block, counter_based=True)
+register_generator("minstd", minstd_block, counter_based=True)
 
 
-def gen_block_by_id(gen_id, seed, stream, n, offset=None):
-    """lax.switch-able: uint32[n] block from generator #gen_id.
-
-    ``offset=None`` (the classic battery hot path) traces exactly the
-    offset-free branches. A traced ``offset`` reads words
-    ``[offset, offset + n)`` of each counter-based generator's
-    (seed, stream) sequence — the campaign grid's per-cell sub-stream
-    selection (core/campaign.py). Because the offset is a runtime value
-    the jump-ahead ladders fall back to their full 64-bit length
-    (``_jump_bits``); one executable then serves every cell offset.
-    ``mwc`` has no jump-ahead, so its branch folds the offset into the
-    stream id instead (a RESEEDED stream, not a sub-stream) — campaigns
-    with more than one stream refuse mwc up front (``CampaignSpec``),
-    this branch only exists so the switch traces uniformly."""
-    if offset is None:
-        fns = [functools.partial(g, seed, stream, n)
-               for g in GENERATORS.values()]
-        return jax.lax.switch(gen_id, fns)
-
-    def _offset_fn(name, g):
-        if name in COUNTER_BASED:
-            return functools.partial(g, seed, stream, n, offset)
-        return lambda: g(seed,
-                         _u64(stream) + (_u64(offset) << _u64(32)), n)
-    fns = [_offset_fn(name, g) for name, g in GENERATORS.items()]
-    return jax.lax.switch(gen_id, fns)
+def __getattr__(name):
+    """``COUNTER_BASED`` is DERIVED from the live registry (PEP 562):
+    the static tuple is retired so a runtime-registered generator's
+    declared capability is visible everywhere the old constant was
+    consulted, with no second source of truth to fall stale."""
+    if name == "COUNTER_BASED":
+        from repro.rng.sources import counter_based_names
+        return counter_based_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -396,8 +386,15 @@ def stream_offsets(n_streams: int, span: int) -> np.ndarray:
     generator per idle machine" is "one sub-stream per grid cell"."""
     if n_streams < 1:
         raise ValueError(f"n_streams must be >= 1, got {n_streams}")
-    if span < 0:
-        raise ValueError(f"span must be >= 0, got {span}")
+    if span < 1:
+        raise ValueError(
+            f"span must be >= 1, got {span}: a zero or negative span "
+            f"would hand every stream overlapping (or wrapped) words")
+    last = (n_streams - 1) * span            # exact Python-int arithmetic
+    if last > np.iinfo(np.int64).max:
+        raise ValueError(
+            f"stream {n_streams - 1} offset {last} overflows int64 "
+            f"words; shrink span ({span}) or n_streams ({n_streams})")
     return np.arange(n_streams, dtype=np.int64) * np.int64(span)
 
 
@@ -411,10 +408,22 @@ def seam_offsets(n_streams: int, span: int, n_words: int) -> np.ndarray:
     up (overlapping or correlated words across the seam)."""
     if n_streams < 2:
         return np.zeros((0,), np.int64)
+    if span < 1:
+        raise ValueError(
+            f"span must be >= 1, got {span}: a zero or negative span "
+            f"would place stream 1's seam at or before word 0 and wrap")
+    if n_words < 1:
+        raise ValueError(f"n_words must be >= 1, got {n_words}")
     if n_words > span:
         raise ValueError(
             f"seam block of {n_words} words needs span >= n_words, "
             f"got span={span}")
+    hi = (n_streams - 1) * span + n_words    # exact Python-int arithmetic
+    if hi > np.iinfo(np.int64).max:
+        raise ValueError(
+            f"seam {n_streams - 2} (streams {n_streams - 2}|"
+            f"{n_streams - 1}) reads up to word {hi}, which overflows "
+            f"int64; shrink span ({span}) or n_streams ({n_streams})")
     seams = np.arange(1, n_streams, dtype=np.int64) * np.int64(span)
     return seams - np.int64(n_words)
 

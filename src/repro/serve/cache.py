@@ -38,16 +38,28 @@ _CODE_DECISION = {v: k for k, v in _DECISION_CODE.items()}
 
 
 def cell_digest(battery: str, scale: float, generator: str, seed: int,
-                offset: int, alpha: float, backend: str) -> str:
+                offset: int, alpha: float, backend: str,
+                source_digest: str = "") -> str:
     """The cell's content address: a 32-hex-char sha256 prefix over the
     full decision-relevant identity (generator, seed, offset, battery,
     scale, alpha, backend). ``backend`` must be the RESOLVED backend
     (``stats.backends.resolve``) — "auto" and the backend it resolves to
     are the same work, and both backends' verdicts are parity-asserted,
     so the caller chooses whether to pass the resolved name (shared
-    slots per host class) per the serve layer's convention."""
+    slots per host class) per the serve layer's convention.
+
+    ``source_digest`` carries the bit-supply's CONTENT identity
+    (``BitSource.digest()``) when it is more than the generator name:
+    for a ``CapturedSource`` it is the sha256 of the file bytes, so a
+    resubmitted capture HITS the cell it already earned while a
+    re-captured or byte-modified file MISSES — same path, different
+    bits, different cell. Generator cells pass ``""`` (their name IS
+    their content identity), which keeps every digest minted before the
+    BitSource layer byte-identical."""
     key = repr((str(battery), float(scale), str(generator), int(seed),
                 int(offset), float(alpha), str(backend)))
+    if source_digest:
+        key = repr((key, str(source_digest)))
     return hashlib.sha256(key.encode()).hexdigest()[:32]
 
 

@@ -71,26 +71,38 @@ QUEUED, RUNNING, DONE, CANCELLED = "queued", "running", "done", "cancelled"
 
 @dataclasses.dataclass(frozen=True)
 class _Cell:
-    """One unit of cacheable work inside a spec: a generator position
-    with its seed and stream offset, plus its content address."""
+    """One unit of cacheable work inside a spec: a source position with
+    its seed and stream offset, plus its content address. ``source`` is
+    the position's ``BitSource`` (the merged batch spec is rebuilt from
+    these, so captured buffers ride through admission unchanged);
+    ``generator`` keeps the reporting name."""
     generator: str
     seed: int
     offset: int
     digest: str
+    source: object = None
 
 
 def spec_cells(spec: RunSpec) -> List[_Cell]:
-    """The spec's generator positions as content-addressed cells (the
+    """The spec's source positions as content-addressed cells (the
     digest folds in the spec-wide battery/scale/alpha and the RESOLVED
-    backend, so "auto" shares slots with whatever it resolves to)."""
+    backend, so "auto" shares slots with whatever it resolves to). A
+    captured source's cell additionally folds the FILE CONTENT digest
+    (``cell_digest``'s ``source_digest``): resubmitting the same capture
+    hits its memoized verdict with zero dispatches, while a re-captured
+    or byte-modified file is a different cell and misses."""
     resolved = kernel_backends.resolve(spec.backend)
     cells = []
-    for g, gen in enumerate(spec.generators):
+    for g, src in enumerate(spec.sources):
+        gen = spec.generators[g]
         off = int(spec.offsets[g]) if spec.offsets is not None else 0
         cells.append(_Cell(gen, int(spec.seeds[g]), off,
                            cell_digest(spec.battery, spec.scale, gen,
                                        spec.seeds[g], off, spec.alpha,
-                                       resolved)))
+                                       resolved,
+                                       src.digest() if src.captured
+                                       else ""),
+                           src))
     return cells
 
 
@@ -428,16 +440,18 @@ class SubmissionQueue:
 
     def _merged_spec(self, key: tuple, cells: List[_Cell],
                      riders: List[Ticket], digest: str) -> RunSpec:
-        """The coalesced RunSpec: one generator position per unique
-        cell, every per-cell knob a runtime argument, checkpointed under
-        a content-derived name so a restarted daemon resumes it."""
+        """The coalesced RunSpec: one source position per unique cell,
+        every per-cell knob a runtime argument, checkpointed under a
+        content-derived name so a restarted daemon resumes it. Cells
+        carry their ``BitSource`` through admission, so captured buffers
+        batch alongside generator positions unchanged."""
         battery, scale, alpha, backend, _pname, _psig, sov = key
         offsets = (tuple(c.offset for c in cells)
                    if any(c.offset for c in cells) else None)
         ck = (os.path.join(self.state_dir, f"batch-{digest}.ck")
               if self.state_dir else None)
         return RunSpec(
-            battery, generators=tuple(c.generator for c in cells),
+            battery, sources=tuple(c.source for c in cells),
             seeds=tuple(c.seed for c in cells), scale=scale,
             policy=riders[0].spec.policy,
             retry=RetryPolicy(max_retries=max(

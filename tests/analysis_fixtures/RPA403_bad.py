@@ -1,0 +1,10 @@
+"""BAD: a registered source never declares its offset capability —
+counter_based cannot be inferred from an out-of-repo block function."""
+from repro.rng.sources import register_generator
+
+
+def ext_block(seed, stream, n, offset=None):
+    return (seed, stream, n, offset)
+
+
+register_generator("ext", ext_block)

@@ -1,0 +1,17 @@
+"""GOOD: every registration declares counter_based=; the offset set is
+read from the live registry instead of a static tuple."""
+from repro.rng.sources import counter_based_names, register_generator
+
+
+def ext_block(seed, stream, n, offset=None):
+    return (seed, stream, n, offset)
+
+
+def mwcish_block(seed, stream, n):
+    return (seed, stream, n)
+
+
+register_generator("ext", ext_block, counter_based=True)
+register_generator("mwcish", mwcish_block, counter_based=False)
+
+OFFSETABLE = counter_based_names()

@@ -1,0 +1,12 @@
+"""BAD: the module registers dynamically but keeps a parallel static
+COUNTER_BASED tuple — it drifts the moment any plugin registers."""
+from repro.rng.sources import register_generator
+
+
+def ext_block(seed, stream, n, offset=None):
+    return (seed, stream, n, offset)
+
+
+register_generator("ext", ext_block, counter_based=True)
+
+COUNTER_BASED = ("ext",)
