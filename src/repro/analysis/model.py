@@ -19,6 +19,7 @@ NOQA_RE = re.compile(r"#\s*repro:\s*noqa\s+((?:RPA\d{3}[,\s]*)+)")
 QUARANTINE_RE = re.compile(r"#\s*repro:\s*quarantine\b")
 VMEM_BOUND_RE = re.compile(r"#\s*repro:\s*vmem-bound\s+([\w.]+)")
 RUNTIME_ARG_RE = re.compile(r"#\s*repro:\s*runtime-arg\b")
+FAULT_BOUNDARY_RE = re.compile(r"#\s*repro:\s*fault-boundary\b")
 
 # a quarantine marker must sit near the top of the module — it describes
 # the whole file, not one line

@@ -13,6 +13,13 @@ compile once and never sync. The classic ways to lose that silently:
   RPA103  a traced function mutating closed-over Python state (appending
           to a module-level list, writing a global dict): the mutation
           happens at *trace* time, once per compilation, not per call.
+  RPA106  fault-injection API (``FaultInjector`` / ``apply_round`` /
+          ``inject_round_faults``) called inside traced code — faults
+          must be injected at the host-side runner boundary (DESIGN.md
+          §12) or they bake into the compile cache and stop being
+          replayable. A genuine boundary function in a known-traced
+          *module* (never a structurally-traced function) opts out with
+          a ``# repro: fault-boundary`` comment on its ``def`` line.
 
 What counts as traced code:
 
@@ -37,7 +44,7 @@ from __future__ import annotations
 import ast
 from typing import Dict, Iterator, List, Optional, Set, Tuple
 
-from repro.analysis.model import Finding
+from repro.analysis.model import FAULT_BOUNDARY_RE, Finding
 from repro.analysis.project import Project, dotted_name
 from repro.analysis.registry import register
 
@@ -64,6 +71,10 @@ HOST_ROOTS = {"np", "numpy"}
 # mutating method names on closed-over containers
 MUTATORS = {"append", "add", "update", "extend", "insert", "pop",
             "setdefault", "clear", "remove", "discard"}
+
+# fault-injection API call names (last dotted component) — host-side only
+FAULT_API = {"FaultInjector", "inject_round_faults", "round_faults",
+             "apply_round"}
 
 
 def _decorator_traced(dec: ast.AST) -> bool:
@@ -349,3 +360,60 @@ def rpa102(project: Project) -> List[Finding]:
           "traced function mutates closed-over Python state")
 def rpa103(project: Project) -> List[Finding]:
     return _run_family(project, "RPA103")
+
+
+def _has_fault_boundary(project: Project, path: str,
+                        fn: ast.FunctionDef) -> bool:
+    """True when the def region (``def`` line through the first body
+    line — where a multi-line signature's comment can sit) carries a
+    ``# repro: fault-boundary`` annotation."""
+    end = fn.body[0].lineno if fn.body else fn.lineno
+    return any(FAULT_BOUNDARY_RE.search(project.line(path, ln))
+               for ln in range(fn.lineno, end + 1))
+
+
+@register("RPA106", "fault-injection-in-trace",
+          "fault-injection API called inside traced code")
+def rpa106(project: Project) -> List[Finding]:
+    """Fault injection is a host-side concern: a ``FaultInjector`` /
+    ``apply_round`` / ``inject_round_faults`` call inside traced code
+    would perturb results at *trace* time — baked into the compile
+    cache, fired once per compilation instead of once per round, and
+    unreplayable from ``(plan, seed)``. Only functions in the
+    known-traced module allowlist may opt out (the boundary shim in
+    ``core/pool.py`` is host-side code that merely *lives* in a traced
+    module); structurally-traced functions (decorated, transform-passed,
+    kernel bodies) never can."""
+    from repro.analysis.registry import get_rule
+    rule = get_rule("RPA106")
+    out: List[Finding] = []
+    for path, tree in project.walk():
+        module_traced = any(path.startswith(p)
+                            for p in TRACED_MODULE_PATHS)
+        by_call = _names_passed_to_transforms(tree)
+        for fn in _functions(tree):
+            structural = (fn.name in by_call
+                          or any(_decorator_traced(d)
+                                 for d in fn.decorator_list)
+                          or _is_kernel_body(fn))
+            if not (module_traced or structural):
+                continue
+            if not structural and _has_fault_boundary(project, path, fn):
+                continue
+            for stmt in _own_statements(fn):
+                for expr in _stmt_exprs(stmt):
+                    for node in ast.walk(expr):
+                        if not isinstance(node, ast.Call):
+                            continue
+                        fname = dotted_name(node.func) or ""
+                        if fname.split(".")[-1] not in FAULT_API:
+                            continue
+                        out.append(Finding(
+                            "RPA106", rule.name, path, node.lineno,
+                            node.col_offset + 1,
+                            f"traced `{fn.name}` calls fault-injection "
+                            f"API `{fname}` — inject at the host-side "
+                            f"runner boundary (DESIGN.md §12), or mark "
+                            f"a genuine boundary in a traced module "
+                            f"with `# repro: fault-boundary`"))
+    return out

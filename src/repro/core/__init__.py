@@ -20,8 +20,17 @@ from repro.core.campaign import (  # noqa: F401
     CampaignResult,
     screen,
 )
+from repro.core.faults import (  # noqa: F401
+    CorruptResultError,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    FaultRule,
+    WorkerHealth,
+)
 from repro.core.policies import (  # noqa: F401
     POLICIES,
+    RetryBudgetExhausted,
     RetryPolicy,
     SchedulePolicy,
     get_policy,

@@ -52,17 +52,20 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterator, List, Optional, Tuple, Union
+from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.ckpt import io as ckpt_io
 from repro.core import stitch
 from repro.core.battery import TestEntry, build_battery
-from repro.core.policies import RetryPolicy, SchedulePolicy, get_policy
-from repro.core.pool import (gather_captured_bits, make_external_runner,
-                             make_fanout_runner, make_grid_runner,
-                             make_round_runner)
+from repro.core.faults import (CorruptResultError, FaultEvent, FaultInjector,
+                               FaultPlan, WorkerHealth)
+from repro.core.policies import (RetryBudgetExhausted, RetryPolicy,
+                                 SchedulePolicy, get_policy)
+from repro.core.pool import (gather_captured_bits, inject_round_faults,
+                             make_external_runner, make_fanout_runner,
+                             make_grid_runner, make_round_runner)
 from repro.core.scheduler import make_plan, replan
 from repro.rng.sources import (BitSource, registry_size,
                                require_offsetable, resolve_source)
@@ -76,6 +79,23 @@ BATTERY_SIZES = {"smallcrush": 10, "crush": 96, "bigcrush": 106,
                  "pairstream": 4}
 DEFAULT_SCALES = {"smallcrush": 1.0, "crush": 4.0, "bigcrush": 16.0,
                   "pairstream": 1.0}
+
+
+def emit_progress(progress: Union[bool, Callable], msg: str) -> None:
+    """The single progress choke point for the drive machinery.
+
+    ``progress`` is a ``RunSpec.progress`` value: ``False`` drops the
+    line, ``True`` prints it to stdout (the interactive CLI), and a
+    callable receives it — which is how daemon and ``--json`` runs keep
+    stdout clean while still logging (``release()`` used to ``print``
+    with no way to redirect the sink).
+    """
+    if not progress:
+        return
+    if callable(progress):
+        progress(msg)
+    else:
+        print(msg, flush=True)
 
 
 # ---------------------------------------------------------------------------
@@ -117,7 +137,18 @@ class RunSpec:
     populated (``generators`` holds each source's reporting name), so
     every consumer that keys results by ``spec.generators[g]`` is
     untouched. Captured sources dispatch as prefetched host buffers,
-    never as switch lanes (DESIGN.md §11)."""
+    never as switch lanes (DESIGN.md §11).
+
+    ``progress`` is ``False`` (silent), ``True`` (print to stdout) or a
+    callable sink — every progress line the drive machinery emits goes
+    through ``emit_progress``, so daemons can log without touching
+    stdout.
+
+    ``inject`` is an optional ``faults.FaultPlan`` (DESIGN.md §12):
+    a seeded-deterministic schedule of simulated pool faults — evict,
+    corrupt, straggle, lose_worker — applied at the host-side runner
+    boundary (``pool.inject_round_faults``), so compiled executables
+    and trace caches are untouched and the run replays bit-for-bit."""
     battery: str
     generators: Union[str, Tuple[str, ...]] = ()
     seeds: Union[int, Tuple[int, ...]] = (0,)  # repro: runtime-arg
@@ -125,12 +156,13 @@ class RunSpec:
     policy: Union[str, SchedulePolicy] = "lpt"
     retry: RetryPolicy = RetryPolicy()  # repro: runtime-arg
     checkpoint_path: Optional[str] = None  # repro: runtime-arg
-    progress: bool = False  # repro: runtime-arg
+    progress: Union[bool, Callable] = False  # repro: runtime-arg
     alpha: float = 0.01  # repro: runtime-arg
     stop_on_verdict: bool = False  # repro: runtime-arg
     backend: str = "auto"
     offsets: Optional[Union[int, Tuple[int, ...]]] = None
     sources: Optional[Tuple] = None
+    inject: Optional[FaultPlan] = None  # repro: runtime-arg
 
     def __post_init__(self):
         if self.battery not in BATTERY_SIZES:
@@ -180,6 +212,9 @@ class RunSpec:
         if self.backend not in kernel_backends.BACKENDS:
             raise KeyError(f"unknown backend {self.backend!r}; "
                            f"known: {kernel_backends.BACKENDS}")
+        if self.inject is not None and not isinstance(self.inject, FaultPlan):
+            raise TypeError(f"inject must be a faults.FaultPlan, "
+                            f"got {type(self.inject)}")
 
     @classmethod
     def preset(cls, battery: str, **overrides) -> "RunSpec":
@@ -422,7 +457,7 @@ class CampaignSpec:
     stream_check: bool = True
     span: Optional[int] = None
     ledger_path: Optional[str] = None
-    progress: bool = False
+    progress: Union[bool, Callable] = False
     sources: Optional[Tuple] = None
 
     def __post_init__(self):
@@ -843,6 +878,14 @@ class BatteryRun:
         self.driver_retries = 0
         self.plan_rounds = 0
         self.cancelled = False
+        # fault domain (DESIGN.md §12): optional deterministic injector,
+        # the event ledger, and the per-slot health/quarantine model —
+        # all host-side, none of it visible to the compiled runners
+        self._injector = (FaultInjector(spec.inject)
+                          if spec.inject is not None else None)
+        self.fault_events: List[FaultEvent] = []
+        self.health = WorkerHealth()
+        self.quarantines: List[dict] = []
         G = spec.n_generators
         self._results: List[Dict[int, tuple]] = [dict() for _ in range(G)]
         # sequential-verdict state: sticky per-generator decisions; a
@@ -907,10 +950,10 @@ class BatteryRun:
         self._queue.clear()
         if residual:
             self._enqueue(residual)
-            if self.spec.progress:
-                print(f"  pool resized to {w} worker(s): {len(residual)} "
-                      f"residual job(s) replanned onto "
-                      f"{len(self._queue)} round(s)", flush=True)
+            emit_progress(self.spec.progress,
+                          f"  pool resized to {w} worker(s): {len(residual)} "
+                          f"residual job(s) replanned onto "
+                          f"{len(self._queue)} round(s)")
 
     # -- HTCondor verbs ----------------------------------------------------
 
@@ -942,10 +985,10 @@ class BatteryRun:
             self._auto_cancel()
             self._save_checkpoint()
             if self.spec.progress:
-                done = self._jobs_done()
-                print(f"  round {self.rounds_run}: {done}/"
-                      f"{len(self._compiled.jobs)} files generated",
-                      flush=True)
+                emit_progress(self.spec.progress,
+                              f"  round {self.rounds_run}: "
+                              f"{self._jobs_done()}/"
+                              f"{len(self._compiled.jobs)} files generated")
         return self.status()
 
     def held(self) -> List[int]:
@@ -1034,9 +1077,9 @@ class BatteryRun:
             dropped = len(self._queue)
             self._queue.clear()
             self.cancelled = True
-            if self.spec.progress:
-                print(f"  verdict decided for all generators — "
-                      f"{dropped} pending round(s) cancelled", flush=True)
+            emit_progress(self.spec.progress,
+                          f"  verdict decided for all generators — "
+                          f"{dropped} pending round(s) cancelled")
 
     def release(self) -> int:
         """condor_release: replan the HELD set. Returns #jobs released.
@@ -1052,17 +1095,28 @@ class BatteryRun:
             return 0
         self.retries += 1
         self._enqueue(h)
-        if self.spec.progress:
-            print(f"  {len(h)} held tests released for retry")
+        emit_progress(self.spec.progress,
+                      f"  {len(h)} held tests released for retry")
         return len(h)
 
     def _driver_release(self) -> int:
         """A release initiated by the drive loop itself — the only kind
-        that spends the ``RetryPolicy`` budget."""
+        that spends the ``RetryPolicy`` budget. Sleeps the policy's
+        exponential backoff (``RetryPolicy.backoff_for``; 0.0 by
+        default, so pre-existing drive loops stay sleepless) before
+        replanning — the condor_release etiquette of not hammering a
+        pool that is actively misbehaving."""
+        delay = self.spec.retry.backoff_for(self.driver_retries)
+        if delay > 0:
+            emit_progress(self.spec.progress,
+                          f"  backing off {delay:.2f}s before release "
+                          f"pass {self.driver_retries + 1}")
+            time.sleep(delay)
         self.driver_retries += 1
         return self.release()
 
-    def drive(self, stop_when=None) -> "BatteryRun":
+    def drive(self, stop_when=None,
+              raise_on_exhausted: bool = True) -> "BatteryRun":
         """The hold/release drive loop shared by ``result()``,
         ``stream()`` and the campaign phase driver: dispatch every queued
         round, then release-and-retry the HELD set until it clears or
@@ -1070,7 +1124,14 @@ class BatteryRun:
         spent. ``stop_when`` is an optional ``handle -> bool`` predicate
         checked after every round; when it fires the remaining rounds
         are cancelled (the campaign uses it to stop a phase the moment
-        every real cell's verdict is decided). Returns ``self``."""
+        every real cell's verdict is decided). Returns ``self``.
+
+        Budget exhaustion with jobs still HELD raises
+        ``RetryBudgetExhausted`` (carrying the final HELD job list)
+        instead of silently finalising with missing results;
+        ``raise_on_exhausted=False`` restores the old give-up behaviour
+        for callers that treat a stalled run as data (the campaign
+        phase driver, the serve daemon's failed-ticket path)."""
         while True:
             while self._queue:
                 self.poll()
@@ -1079,8 +1140,12 @@ class BatteryRun:
                     break
             if self.done or self.cancelled:
                 break
-            if (not self.held()
-                    or self.driver_retries >= self.spec.retry.max_retries):
+            held = self.held()
+            if not held:
+                break
+            if self.driver_retries >= self.spec.retry.max_retries:
+                if raise_on_exhausted:
+                    raise RetryBudgetExhausted(held, self.driver_retries)
                 break
             self._driver_release()
         return self
@@ -1089,13 +1154,19 @@ class BatteryRun:
         """Yield one status per round until the run completes — INCLUDING
         hold/release retry rounds, exactly like ``result()``'s drive
         loop, so a streaming client sees the retries instead of the
-        stream ending silently while jobs are still HELD."""
+        stream ending silently while jobs are still HELD. Like
+        ``drive()``, budget exhaustion with jobs still HELD raises
+        ``RetryBudgetExhausted``."""
         while True:
             while self._queue:
                 yield self.poll()
-            if (self.done or self.cancelled or not self.held()
-                    or self.driver_retries >= self.spec.retry.max_retries):
+            if self.done or self.cancelled:
                 return
+            held = self.held()
+            if not held:
+                return
+            if self.driver_retries >= self.spec.retry.max_retries:
+                raise RetryBudgetExhausted(held, self.driver_retries)
             self._driver_release()
 
     def result(self) -> Union[RunResult, BatteryResult]:
@@ -1188,9 +1259,111 @@ class BatteryRun:
             stats, ps = np.asarray(stats), np.asarray(ps)
             per_gen += [(g, stats[a], ps[a])
                         for a, g in enumerate(captured)]
+        # ---- fault domain (DESIGN.md §12): everything below is host-side
+        # post-processing of materialised numpy results — the compiled
+        # runners above never see a fault, a gate, or a quarantine
+        injected: List[FaultEvent] = []
+        resize_to: Optional[int] = None
+        if self._injector is not None:
+            per_gen = [(g, np.array(st, np.float64), np.array(pv, np.float64))
+                       for g, st, pv in per_gen]
+            injected, resize_to = inject_round_faults(
+                self._injector, self.rounds_run, row,
+                [(st, pv) for _, st, pv in per_gen],
+                deadline=self.spec.retry.deadline)
+            self.fault_events.extend(injected)
+            for ev in injected:
+                emit_progress(self.spec.progress,
+                              f"  fault[{ev.kind}] round {ev.round} "
+                              f"slot {ev.slot} job {ev.job}: {ev.detail}")
+        per_gen, gate_events = self._sanity_gate(row, per_gen, injected)
+        if resize_to is not None and resize_to != self.session.n_workers:
+            emit_progress(self.spec.progress,
+                          f"  worker lost: pool resizes to {resize_to}")
+            self.session.resize(resize_to)
+        self._update_health(row, injected + gate_events)
         for g, st, pv in per_gen:
             self._results[g] = stitch.fold(row[None, :], st[None, :],
                                            pv[None, :], self._results[g])
+
+    def _sanity_gate(self, row: np.ndarray, per_gen: list,
+                     injected: List[FaultEvent]) -> tuple:
+        """The result sanity gate: a non-idle slot whose stat or p is
+        non-finite, or whose p falls outside [0, 1], is a corrupt
+        result. It is nulled to NaN — so ``stitch.missing`` marks the
+        job HELD and the retry machinery re-executes it — and recorded
+        in the fault ledger as a ``corrupt_result`` event carrying the
+        :class:`CorruptResultError` text. Silent corruption therefore
+        becomes HELD+retry, never a wrong verdict. Slots an injected
+        ``evict``/deadline-exceeded ``straggle`` already nulled this
+        round are skipped (they are accounted faults, not corruption).
+        Returns ``(per_gen, gate_events)``."""
+        nulled = {ev.slot for ev in injected
+                  if ev.kind == "evict"
+                  or (ev.kind == "straggle" and "HELD" in ev.detail)}
+        row = np.asarray(row)
+        events: List[FaultEvent] = []
+        out = []
+        for g, st, pv in per_gen:
+            st, pv = np.asarray(st), np.asarray(pv)
+            bad = (row >= 0) & ~(np.isfinite(st) & np.isfinite(pv)
+                                 & (pv >= 0.0) & (pv <= 1.0))
+            for w in np.nonzero(bad)[0]:
+                bad[w] = int(w) not in nulled
+            if bad.any():
+                st = np.array(st, np.float64)
+                pv = np.array(pv, np.float64)
+                for w in np.nonzero(bad)[0]:
+                    err = CorruptResultError(
+                        f"job {int(row[w])} (slot {int(w)}, generator "
+                        f"position {g}) returned stat={float(st[w])!r} "
+                        f"p={float(pv[w])!r}; p must be finite and in "
+                        f"[0, 1] — result quarantined to HELD")
+                    events.append(FaultEvent(
+                        self.rounds_run, "corrupt_result", int(w),
+                        int(row[w]), -1, str(err)))
+                    emit_progress(self.spec.progress,
+                                  f"  corrupt result gated: {err}")
+                st[bad] = np.nan
+                pv[bad] = np.nan
+            out.append((g, st, pv))
+        self.fault_events.extend(events)
+        return out, events
+
+    def _update_health(self, row: np.ndarray,
+                       events: List[FaultEvent]) -> None:
+        """Advance the per-slot health model with this round's outcome
+        and quarantine flaky slots. Every non-idle slot either faulted
+        (an injected evict/corrupt/straggle or a gated corrupt result
+        landed on it) or ran clean; a slot whose consecutive-fault
+        streak reaches ``RetryPolicy.quarantine_after`` is removed from
+        the pool via the elastic ``resize`` path (floored at one
+        worker), and its residual jobs replan onto the survivors at the
+        next round boundary. After the re-mesh slot identities change,
+        so all streaks reset."""
+        faulted = {int(ev.slot) for ev in events if ev.slot >= 0}
+        for w in range(row.shape[0]):
+            if int(row[w]) >= 0:
+                self.health.record(w, w in faulted)
+        qa = self.spec.retry.quarantine_after
+        if not qa:
+            return
+        flaky = self.health.flaky(qa)
+        cur = self.session.n_workers
+        if not flaky or cur <= 1:
+            return
+        new_w = max(1, cur - len(flaky))
+        self.quarantines.append({"round": self.rounds_run,
+                                 "slots": flaky, "workers": new_w})
+        self.fault_events.append(FaultEvent(
+            self.rounds_run, "quarantine", flaky[0], -1, -1,
+            f"slot(s) {flaky} quarantined after {qa} consecutive "
+            f"fault(s); pool shrinks to {new_w} worker(s)"))
+        emit_progress(self.spec.progress,
+                      f"  slot(s) {flaky} quarantined — pool shrinks "
+                      f"to {new_w} worker(s)")
+        self.health.reset()
+        self.session.resize(new_w)
 
     # -- checkpointing -----------------------------------------------------
 

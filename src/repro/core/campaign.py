@@ -50,7 +50,7 @@ from repro.ckpt import io as ckpt_io
 from repro.core import stitch
 from repro.core.api import (CELL_FAIL, CELL_PASS, CELL_UNDECIDED,
                             CampaignLedger, CampaignSpec, PoolSession,
-                            RunSpec)
+                            RunSpec, emit_progress)
 from repro.core.battery import build_battery, max_words
 from repro.core.pool import word_bucket
 from repro.core.scheduler import wave_schedule
@@ -229,9 +229,9 @@ class Campaign:
         of freezing its undecided cells forever."""
         groups = self._phase_cells(phase)
         if not groups:
-            if self.spec.progress:
-                print(f"phase {k} ({phase.name}): no surviving cells — "
-                      "skipped", flush=True)
+            emit_progress(self.spec.progress,
+                          f"phase {k} ({phase.name}): no surviving cells — "
+                          "skipped")
             return True
         pair_words = 0
         if phase.offset_rule == "seam":
@@ -256,16 +256,19 @@ class Campaign:
                        alpha=self.spec.alpha,
                        backend=self.spec.backend, offsets=tuple(offs),
                        checkpoint_path=ck, progress=self.spec.progress)
-        if self.spec.progress:
-            print(f"phase {k} ({phase.name}): {n_real} cell(s) "
-                  f"(+{pad} pad) on battery={phase.battery} "
-                  f"scale={phase.scale:g}", flush=True)
+        emit_progress(self.spec.progress,
+                      f"phase {k} ({phase.name}): {n_real} cell(s) "
+                      f"(+{pad} pad) on battery={phase.battery} "
+                      f"scale={phase.scale:g}")
         # the shared drive loop (BatteryRun.drive) owns the hold/release
         # retry budget; stop_when cancels the phase's residual rounds the
-        # moment every REAL cell (padding excluded) is decided
+        # moment every REAL cell (padding excluded) is decided. A stalled
+        # phase is DATA here (the ledger keeps it retryable), so budget
+        # exhaustion must not raise out of the campaign driver.
         handle = self.session.submit(spec).drive(
             stop_when=lambda h: all(
-                v.decided for v in h.verdicts_by_position()[:n_real]))
+                v.decided for v in h.verdicts_by_position()[:n_real]),
+            raise_on_exhausted=False)
         self.rounds_run += handle.rounds_run
         verdicts = handle.verdicts_by_position()[:n_real]
         for grp, v in zip(groups, verdicts):

@@ -1,0 +1,326 @@
+"""Deterministic fault injection for the battery pool (DESIGN.md §12).
+
+The paper's pools are *opportunistic*: idle workstations join the pool
+and are reclaimed without warning, so jobs get evicted, held, and
+straggled as a matter of course (condor_vacate / condor_release).  The
+reproduction survives all of that through the hold/release discipline,
+but until this module it could neither *provoke* those failures nor
+prove the recovery bitwise.  `FaultPlan` is a declarative, seeded
+schedule of faults; `FaultInjector` replays it bit-for-bit from
+``(plan, seed)`` at the host-side runner boundary in ``pool.py`` —
+after the traced executable returns, before results are folded — so
+compiled kernels and trace caches never see a fault.
+
+Fault kinds (``FAULT_KINDS``):
+
+  evict        result for the slot is nulled to NaN → stitch marks the
+               job HELD and the retry machinery replans it (the
+               condor_vacate path).
+  corrupt      the slot's (stat, p) float64 bits are perturbed — a
+               *silent* corruption that the result sanity gate in
+               ``api.BatteryRun`` must catch (p outside [0,1] /
+               non-finite) and convert to HELD instead of a verdict.
+  straggle     the slot's simulated latency is inflated by ``delay_s``;
+               when ``RetryPolicy.deadline`` is set and exceeded the
+               job is converted to HELD, otherwise the event is only
+               recorded in the ledger.
+  lose_worker  the pool width drops via the existing elastic ``resize``
+               path at the next round boundary (machine reclaimed).
+
+Everything here is host-side numpy + stdlib; nothing imports jax, so
+fault logic can never leak into a traced context (rule RPA106 enforces
+the same property at call sites).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("evict", "corrupt", "straggle", "lose_worker")
+
+
+class CorruptResultError(ValueError):
+    """A runner returned a result that fails the sanity gate.
+
+    Raised-or-recorded when a non-idle slot reports a non-finite stat,
+    a non-finite p, or a p outside [0, 1].  The drive loop never lets
+    this become a verdict: the offending job is nulled to NaN, folded
+    as missing, and replanned on the next release pass.
+    """
+
+
+def _bit_flip(x: float) -> float:
+    """Flip bit 62 (the top exponent bit) of a float64.
+
+    Chosen so corruption is *detectable by construction*: any p-value
+    in [0, 1] maps to a huge (>1) or non-finite float, which the
+    sanity gate rejects.  Deterministic, involutive, no randomness.
+    """
+    u = np.array([x], dtype=np.float64).view(np.uint64)
+    u ^= np.uint64(1) << np.uint64(62)
+    return float(u.view(np.float64)[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRule:
+    """One line of a fault schedule.
+
+    ``kind`` is one of ``FAULT_KINDS``.  ``round``/``slot``/``job``
+    select where the fault fires (``None`` = any); ``p`` is the
+    per-match Bernoulli probability drawn deterministically from the
+    plan seed; ``delay_s`` is the injected latency for ``straggle``;
+    ``width`` is the post-fault pool width for ``lose_worker``
+    (default: current width − 1, floored at 1).
+    """
+
+    kind: str
+    round: Optional[int] = None
+    slot: Optional[int] = None
+    job: Optional[int] = None
+    p: float = 1.0
+    delay_s: float = 0.0
+    width: Optional[int] = None
+
+    def __post_init__(self):
+        """Reject malformed rules up front (typed, not at fire time)."""
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if not (0.0 < self.p <= 1.0):
+            raise ValueError(f"fault probability must be in (0, 1], "
+                             f"got {self.p}")
+        if self.round is not None and self.round < 0:
+            raise ValueError(f"round must be >= 0, got {self.round}")
+        if self.slot is not None and self.slot < 0:
+            raise ValueError(f"slot must be >= 0, got {self.slot}")
+        if self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+        if self.width is not None and self.width < 1:
+            raise ValueError(f"width must be >= 1, got {self.width}")
+
+    def to_dict(self) -> Dict:
+        """JSON-safe dict (``None`` fields elided) for the wire format."""
+        d = dataclasses.asdict(self)
+        return {k: v for k, v in d.items()
+                if v is not None and not (k == "p" and v == 1.0)
+                and not (k == "delay_s" and v == 0.0)}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A declarative, seeded fault schedule (the ``--inject`` payload).
+
+    Frozen and hashable so it can ride on a ``RunSpec``; the ``seed``
+    plus a rule's index fully determine every probabilistic draw, so a
+    plan replays bit-for-bit across runs, checkpoint resumes, and
+    machines.
+    """
+
+    rules: Tuple[FaultRule, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        """Normalise ``rules`` to a tuple of FaultRule."""
+        object.__setattr__(self, "rules", tuple(self.rules))
+        for r in self.rules:
+            if not isinstance(r, FaultRule):
+                raise TypeError(f"rules must be FaultRule, got {type(r)}")
+
+    def to_dict(self) -> Dict:
+        """JSON-safe dict: ``{"seed": ..., "rules": [...]}``."""
+        return {"seed": self.seed,
+                "rules": [r.to_dict() for r in self.rules]}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultPlan":
+        """Inverse of :meth:`to_dict` (unknown keys are an error)."""
+        rules = tuple(FaultRule(**r) for r in d.get("rules", ()))
+        return cls(rules=rules, seed=int(d.get("seed", 0)))
+
+    def save(self, path: str) -> None:
+        """Write the plan as JSON (the ``--inject PLAN.json`` format)."""
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        """Read a plan written by :meth:`save` (or by hand)."""
+        with open(path, encoding="utf-8") as f:
+            return cls.from_dict(json.load(f))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One ledger entry: what fired, where, and why.
+
+    ``rule`` is the index into ``plan.rules`` (−1 for events the
+    injector did not cause, e.g. sanity-gate detections and
+    quarantines).  The ledger is plain data so ``--json`` can carry it
+    verbatim.
+    """
+
+    round: int
+    kind: str
+    slot: int
+    job: int
+    rule: int = -1
+    detail: str = ""
+
+    def to_dict(self) -> Dict:
+        """JSON-safe dict for the ``--json`` fault ledger."""
+        return dataclasses.asdict(self)
+
+
+class WorkerHealth:
+    """Per-slot consecutive-fault counters (the quarantine input).
+
+    A slot's counter bumps on every round it faulted and resets on
+    every clean round; slots whose counter reaches
+    ``RetryPolicy.quarantine_after`` are reported flaky.  After a
+    re-mesh (resize) slot identities change, so the caller resets all
+    counters via :meth:`reset`.
+    """
+
+    def __init__(self):
+        """Start with no history and no quarantined slots."""
+        self._consecutive: Dict[int, int] = {}
+        self.total_faults = 0
+
+    def record(self, slot: int, faulted: bool) -> None:
+        """Bump ``slot``'s streak if it faulted this round, else reset it."""
+        if faulted:
+            self._consecutive[slot] = self._consecutive.get(slot, 0) + 1
+            self.total_faults += 1
+        else:
+            self._consecutive[slot] = 0
+
+    def consecutive(self, slot: int) -> int:
+        """Current consecutive-fault streak for ``slot``."""
+        return self._consecutive.get(slot, 0)
+
+    def flaky(self, threshold: int) -> List[int]:
+        """Slots whose streak has reached ``threshold`` (sorted)."""
+        return sorted(s for s, c in self._consecutive.items()
+                      if c >= threshold)
+
+    def reset(self) -> None:
+        """Forget all streaks (called after a re-mesh renumbers slots)."""
+        self._consecutive.clear()
+
+
+class FaultInjector:
+    """Replays a :class:`FaultPlan` against dispatch rounds.
+
+    Stateless apart from the event ledger: every probabilistic draw is
+    ``sha256(seed, rule_index, round, slot)``, so the same plan against
+    the same schedule produces the same faults — including across a
+    checkpoint resume, where earlier rounds are simply never
+    re-dispatched.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        """Bind the injector to one plan; the ledger starts empty."""
+        if not isinstance(plan, FaultPlan):
+            raise TypeError(f"expected FaultPlan, got {type(plan)}")
+        self.plan = plan
+        self.events: List[FaultEvent] = []
+
+    def _draw(self, rule_idx: int, round_idx: int, slot: int) -> bool:
+        """Deterministic Bernoulli(p) draw for one (rule, round, slot)."""
+        rule = self.plan.rules[rule_idx]
+        if rule.p >= 1.0:
+            return True
+        key = f"{self.plan.seed}:{rule_idx}:{round_idx}:{slot}".encode()
+        h = hashlib.sha256(key).digest()
+        return int.from_bytes(h[:8], "big") / 2.0 ** 64 < rule.p
+
+    def matches(self, round_idx: int,
+                row: np.ndarray) -> List[Tuple[int, FaultRule, int]]:
+        """Resolve which (rule, slot) pairs fire for this round's row.
+
+        ``row`` is the round's job assignment (job id per slot, −1 =
+        idle).  Idle slots never fault — there is nothing to evict.
+        ``lose_worker`` rules are slot-independent and fire at most
+        once per round (reported with slot −1).
+        """
+        out: List[Tuple[int, FaultRule, int]] = []
+        for idx, rule in enumerate(self.plan.rules):
+            if rule.round is not None and rule.round != round_idx:
+                continue
+            if rule.kind == "lose_worker":
+                if self._draw(idx, round_idx, -1):
+                    out.append((idx, rule, -1))
+                continue
+            if rule.slot is not None:
+                slots = [rule.slot] if rule.slot < row.shape[0] else []
+            else:
+                slots = list(range(row.shape[0]))
+            for s in slots:
+                if int(row[s]) < 0:
+                    continue                      # idle sentinel: no job
+                if rule.job is not None and int(row[s]) != rule.job:
+                    continue
+                if self._draw(idx, round_idx, s):
+                    out.append((idx, rule, s))
+        return out
+
+    def apply_round(self, round_idx: int, row: np.ndarray,
+                    arrays: Sequence[Tuple[np.ndarray, np.ndarray]],
+                    deadline: Optional[float] = None,
+                    ) -> Tuple[List[FaultEvent], Optional[int]]:
+        """Mutate one round's host-side results according to the plan.
+
+        ``arrays`` is a sequence of per-generator ``(stats, ps)`` pairs
+        shaped (W,), exactly as the runner returned them; mutation
+        happens in place.  Returns ``(events, resize_to)`` where
+        ``resize_to`` is the requested post-round width (``None`` if no
+        ``lose_worker`` fired).  Events are also appended to
+        ``self.events``.
+        """
+        events: List[FaultEvent] = []
+        resize_to: Optional[int] = None
+        delays: Dict[int, float] = {}
+        for idx, rule, slot in self.matches(round_idx, row):
+            if rule.kind == "lose_worker":
+                want = rule.width if rule.width is not None \
+                    else row.shape[0] - 1
+                resize_to = max(1, int(want))
+                events.append(FaultEvent(
+                    round_idx, "lose_worker", -1, -1, idx,
+                    f"pool width drops to {resize_to} after this round"))
+                continue
+            job = int(row[slot])
+            if rule.kind == "evict":
+                for st, pv in arrays:
+                    st[slot] = np.nan
+                    pv[slot] = np.nan
+                events.append(FaultEvent(
+                    round_idx, "evict", slot, job, idx,
+                    "result nulled; job goes HELD (condor_vacate)"))
+            elif rule.kind == "corrupt":
+                for st, pv in arrays:
+                    st[slot] = _bit_flip(float(st[slot]))
+                    pv[slot] = _bit_flip(float(pv[slot]))
+                events.append(FaultEvent(
+                    round_idx, "corrupt", slot, job, idx,
+                    "stat/p bits perturbed (silent corruption)"))
+            elif rule.kind == "straggle":
+                delays[slot] = delays.get(slot, 0.0) + rule.delay_s
+                held = deadline is not None and delays[slot] > deadline
+                if held:
+                    for st, pv in arrays:
+                        st[slot] = np.nan
+                        pv[slot] = np.nan
+                events.append(FaultEvent(
+                    round_idx, "straggle", slot, job, idx,
+                    f"latency +{rule.delay_s:g}s"
+                    + (f" > deadline {deadline:g}s; job HELD" if held
+                       else " (within deadline)" if deadline is not None
+                       else " (no deadline set)")))
+        self.events.extend(events)
+        return events, resize_to

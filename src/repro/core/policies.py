@@ -29,6 +29,7 @@ its compile cache on the decomposition signature, not the plan mode.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable
 
 import numpy as np
@@ -297,8 +298,74 @@ def get_policy(policy: Union[str, SchedulePolicy]) -> SchedulePolicy:
 # retry
 
 
+class RetryBudgetExhausted(RuntimeError):
+    """The driver's release budget ran out with jobs still HELD.
+
+    Raised by ``BatteryRun.drive``/``stream`` (and re-raised by
+    ``serve.Ticket.result`` for failed tickets) instead of silently
+    finalising with missing results.  Carries the final HELD job-id
+    list so callers can report or replan; catch it and call
+    ``_finalize`` explicitly if a partial report is genuinely wanted.
+    """
+
+    def __init__(self, held: Sequence[int], retries: int):
+        """Record the unrecoverable job ids and the budget that was spent."""
+        self.held = [int(j) for j in held]
+        self.retries = int(retries)
+        super().__init__(
+            f"retry budget exhausted after {self.retries} release "
+            f"pass(es) with {len(self.held)} job(s) still HELD: "
+            f"{self.held}")
+
+
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """hold/release discipline: how many release passes the driver grants
-    before HELD jobs are reported as missing (paper: condor_release)."""
+    before exhaustion is reported as :class:`RetryBudgetExhausted`
+    (paper: condor_release), plus the robustness knobs of DESIGN.md §12 —
+    exponential backoff between release passes, a per-round straggler
+    ``deadline``, and the consecutive-fault ``quarantine_after``
+    threshold for flaky worker slots."""
     max_retries: int = 2
+    backoff_base: float = 0.0      # seconds before the first release; 0 = off
+    backoff_mult: float = 2.0      # exponential growth per release pass
+    backoff_max: float = 60.0      # hard cap, jitter included
+    deadline: Optional[float] = None      # per-round seconds before HELD
+    quarantine_after: Optional[int] = None  # consecutive faults per slot
+
+    def __post_init__(self):
+        """Reject nonsense budgets up front instead of failing silently."""
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base < 0:
+            raise ValueError(
+                f"backoff_base must be >= 0, got {self.backoff_base}")
+        if self.backoff_mult < 1.0:
+            raise ValueError(
+                f"backoff_mult must be >= 1, got {self.backoff_mult}")
+        if self.backoff_max < 0:
+            raise ValueError(
+                f"backoff_max must be >= 0, got {self.backoff_max}")
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(
+                f"deadline must be > 0 seconds, got {self.deadline}")
+        if self.quarantine_after is not None and self.quarantine_after < 1:
+            raise ValueError(
+                f"quarantine_after must be >= 1, got {self.quarantine_after}")
+
+    def backoff_for(self, attempt: int) -> float:
+        """Seconds to sleep before driver release pass ``attempt`` (0-based).
+
+        Exponential (``base * mult**attempt``) with up to 10%
+        deterministic jitter — the jitter is a sha256 hash of the
+        attempt index, not a random draw, so replays are bit-for-bit —
+        clamped to ``backoff_max``.  Returns 0.0 when backoff is off
+        (the default), which keeps pre-existing drive loops sleepless.
+        """
+        if self.backoff_base <= 0:
+            return 0.0
+        raw = self.backoff_base * self.backoff_mult ** max(int(attempt), 0)
+        h = hashlib.sha256(f"backoff:{int(attempt)}".encode()).digest()
+        jitter = 1.0 + 0.1 * (int.from_bytes(h[:4], "big") / 2.0 ** 32)
+        return min(self.backoff_max, raw * jitter)

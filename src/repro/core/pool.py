@@ -338,6 +338,27 @@ def make_batch_runner(entries: List[TestEntry], mesh):
     return under_x64(jax.jit(plan_fn))
 
 
+def inject_round_faults(injector, round_idx, row, arrays,  # repro: fault-boundary
+                        deadline=None):
+    """THE host-side fault-injection boundary (DESIGN.md §12, RPA106).
+
+    Called by the driver in ``core/api.py`` strictly AFTER the compiled
+    runner returned and materialised host numpy arrays, and strictly
+    BEFORE the results are folded by ``stitch`` — the one point where a
+    simulated eviction/corruption/straggle can touch results without
+    the traced executables or their compile caches ever seeing it.
+    ``arrays`` is the round's per-generator ``[(stats, ps), ...]``
+    (each (W,)), mutated in place; returns ``(events, resize_to)``
+    from :meth:`repro.core.faults.FaultInjector.apply_round`.
+
+    Fault logic must never move inside a jitted/shard_mapped body:
+    analysis rule RPA106 flags any injector call site in a traced
+    context, and only this annotated host boundary is sanctioned.
+    """
+    return injector.apply_round(round_idx, np.asarray(row), arrays,
+                                deadline=deadline)
+
+
 def _entry_signature(e: TestEntry) -> tuple:
     """Structural identity of an entry for compile caching: everything
     ``_job_fn`` consumes. Registry-built kernels are a pure function of

@@ -107,6 +107,13 @@ def main():
                          "reference = pure-jnp, accelerated = Pallas "
                          "kernels, auto = accelerated on real TPU only")
     ap.add_argument("--retries", type=int, default=2)
+    ap.add_argument("--inject", default=None, metavar="PLAN.json",
+                    help="chaos-test the run under a deterministic fault "
+                         "plan (core/faults.py JSON: seeded rules of kind "
+                         "evict/corrupt/straggle/lose_worker); the --json "
+                         "payload gains a 'faults' ledger. Recovered runs "
+                         "are bitwise identical to the clean run "
+                         "(DESIGN.md §12)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resize-at", dest="resize_at", default=None,
                     help="comma-separated ROUND:WIDTH pairs — resize the "
@@ -166,6 +173,10 @@ def main():
                                      "--no-stream-check")):
             if flag != default:
                 ap.error(f"{name} only applies with --campaign")
+    if args.inject and (args.serve or args.campaign):
+        ap.error("--inject only applies to the classic run path (serve/"
+                 "campaign chaos testing is driven through the library: "
+                 "SubmissionQueue(inject=...))")
     if args.adaptive:
         if args.policy not in ("lpt", "adaptive"):
             ap.error(f"--adaptive selects the adaptive schedule policy; "
@@ -192,7 +203,9 @@ def main():
     from repro.core import stitch                     # noqa: E402 (after env)
     from repro.core.api import (                      # noqa: E402
         BatteryResult, CampaignSpec, PoolSession, RunSpec)
-    from repro.core.policies import RetryPolicy       # noqa: E402
+    from repro.core.faults import FaultPlan           # noqa: E402
+    from repro.core.policies import (                 # noqa: E402
+        RetryBudgetExhausted, RetryPolicy)
     from repro.launch.mesh import make_pool_mesh      # noqa: E402
 
     from repro.stats import backends as kernel_backends  # noqa: E402
@@ -283,12 +296,18 @@ def main():
         # error); undecided cells mean the screening did not finish
         sys.exit(0 if n_open == 0 else 1)
     launch_workers = session.n_workers          # width before any resize
+    fault_plan = None
+    if args.inject:
+        try:
+            fault_plan = FaultPlan.load(args.inject)
+        except (OSError, ValueError, TypeError, KeyError) as exc:
+            ap.error(f"--inject {args.inject!r}: {exc}")
     spec = RunSpec(args.battery, sources=positions, seeds=(args.seed,),
                    scale=args.scale, policy=args.policy,
                    retry=RetryPolicy(max_retries=args.retries),
                    checkpoint_path=args.ckpt, progress=True,
                    alpha=args.alpha, stop_on_verdict=args.adaptive,
-                   backend=args.backend)
+                   backend=args.backend, inject=fault_plan)
     names = spec.generators
     backend_resolved = kernel_backends.resolve(args.backend)
     print(f"pool: {session.n_workers} workers | battery={args.battery} "
@@ -359,7 +378,11 @@ def main():
                                 "workers": resize_at[rnd]})
                 print(f"  resize: pool -> {resize_at[rnd]} workers after "
                       f"round {handle.rounds_run}")
-        res = handle.result()
+        try:
+            res = handle.result()
+        except RetryBudgetExhausted as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            sys.exit(2)
         multi = isinstance(res, BatteryResult)
         runs = res.runs if multi else {names[0]: res}
         wall_s, rounds_run = res.wall_s, res.rounds_run
@@ -395,6 +418,13 @@ def main():
                 {"spec": raw, "uid": src.uid()}
                 for raw, src in zip(source_specs,
                                     spec.sources[len(gens):])]
+        if args.inject:
+            # only present under --inject (which forbids --serve, so
+            # `handle` is guaranteed bound): the fault/quarantine ledger
+            payload["faults"] = {
+                "plan": fault_plan.to_dict(),
+                "events": [e.to_dict() for e in handle.fault_events],
+                "quarantines": list(handle.quarantines)}
         for gen, run in runs.items():
             tests = []
             for e in entries:

@@ -7,10 +7,12 @@ shared dispatches (admission batching) while a content-addressed
 result cache answers repeat submissions with zero dispatches."""
 from repro.serve.cache import (CACHE_VERSION, CacheEntry, ResultCache,
                                cell_digest)
-from repro.serve.queue import (SubmissionQueue, Ticket, admission_key,
+from repro.serve.queue import (CANCELLED, DONE, FAILED, QUEUED, RUNNING,
+                               SubmissionQueue, Ticket, admission_key,
                                spec_cells)
 
 __all__ = [
     "CACHE_VERSION", "CacheEntry", "ResultCache", "cell_digest",
     "SubmissionQueue", "Ticket", "admission_key", "spec_cells",
+    "QUEUED", "RUNNING", "DONE", "CANCELLED", "FAILED",
 ]

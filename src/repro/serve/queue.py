@@ -61,12 +61,15 @@ from repro.core import stitch
 from repro.core.api import (BatteryResult, CampaignSpec, PoolSession,
                             RunResult, RunSpec)
 from repro.core.campaign import Campaign
-from repro.core.policies import RetryPolicy, get_policy
+from repro.core.faults import FaultPlan
+from repro.core.policies import RetryBudgetExhausted, get_policy
 from repro.serve.cache import CacheEntry, ResultCache, cell_digest
 from repro.stats import backends as kernel_backends
 
-# ticket lifecycle states (DESIGN.md §10)
-QUEUED, RUNNING, DONE, CANCELLED = "queued", "running", "done", "cancelled"
+# ticket lifecycle states (DESIGN.md §10; FAILED is §12's graceful-
+# degradation terminal — budget exhaustion resolves tickets, never hangs)
+QUEUED, RUNNING, DONE, CANCELLED, FAILED = (
+    "queued", "running", "done", "cancelled", "failed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,13 +112,15 @@ def spec_cells(spec: RunSpec) -> List[_Cell]:
 def admission_key(spec: RunSpec) -> tuple:
     """The compatibility class admission batching coalesces within:
     specs agreeing on (battery, scale, alpha, resolved backend, policy,
-    stop_on_verdict) can share one dispatch — everything else about
-    them (generators, seeds, offsets) is a runtime argument of the
-    merged run."""
+    stop_on_verdict, fault plan) can share one dispatch — everything
+    else about them (generators, seeds, offsets) is a runtime argument
+    of the merged run. A spec carrying an ``inject`` plan only batches
+    with specs carrying the SAME plan (fault injection is a property of
+    the shared dispatch, so strangers must not inherit it silently)."""
     policy = get_policy(spec.policy)
     return (spec.battery, float(spec.scale), float(spec.alpha),
             kernel_backends.resolve(spec.backend), policy.name,
-            policy.signature(), bool(spec.stop_on_verdict))
+            policy.signature(), bool(spec.stop_on_verdict), spec.inject)
 
 
 class Ticket:
@@ -137,6 +142,7 @@ class Ticket:
         self.submitted = time.monotonic()
         self.batch_id: Optional[int] = None
         self.cache_hits = 0
+        self.failure: Optional[dict] = None         # FAILED terminal detail
         self._cached: Dict[int, CacheEntry] = {}    # position -> entry
         self._positions: Dict[int, int] = {}        # position -> batch pos
         self._campaign: Optional[Campaign] = None
@@ -147,8 +153,9 @@ class Ticket:
 
     @property
     def done(self) -> bool:
-        """True once the ticket reached a terminal state."""
-        return self.state in (DONE, CANCELLED)
+        """True once the ticket reached a terminal state (DONE,
+        CANCELLED or FAILED — a failed ticket is resolved, not stuck)."""
+        return self.state in (DONE, CANCELLED, FAILED)
 
     def poll(self) -> dict:
         """One non-blocking look: advance the daemon a cooperative step
@@ -186,7 +193,11 @@ class Ticket:
         ``RunResult``/``BatteryResult`` (``CampaignResult`` for a
         campaign ticket). With a background daemon thread this waits;
         otherwise it drives the queue's cooperative loop. ``timeout``
-        (seconds) raises ``TimeoutError`` when exceeded."""
+        (seconds) raises ``TimeoutError`` when exceeded. A FAILED
+        ticket (its batch exhausted the retry budget with jobs still
+        HELD) raises ``RetryBudgetExhausted`` carrying the HELD job
+        list — the structured terminal of DESIGN.md §12, never a
+        hang."""
         if self._queue.serving:
             if not self._event.wait(timeout):
                 raise TimeoutError(f"ticket {self.id} not done within "
@@ -205,13 +216,19 @@ class Ticket:
                         "no work left but the ticket is not terminal")
         if self.state == CANCELLED:
             raise RuntimeError(f"ticket {self.id} was cancelled")
+        if self.state == FAILED:
+            raise RetryBudgetExhausted(self.failure["held_jobs"],
+                                       self.failure["retries"])
         return self._result
 
     def status(self) -> dict:
         """A condor_q-shaped snapshot: lifecycle state, batch id, cache
-        hits, and — while the shared batch is live — its run counters."""
+        hits, failure detail for a FAILED ticket, and — while the shared
+        batch is live — its run counters."""
         out = {"ticket": self.id, "kind": self.kind, "state": self.state,
                "batch": self.batch_id, "cache_hits": self.cache_hits}
+        if self.failure is not None:
+            out["failure"] = dict(self.failure)
         batch = self._queue._batch_of(self)
         if batch is not None:
             run = batch.handle.status()
@@ -242,15 +259,22 @@ class SubmissionQueue:
     ``state_dir`` to persist the result cache and batch checkpoints
     across daemon restarts. ``max_wait`` (seconds) is the admission
     fairness bound — the longest any submission waits for companions
-    before its batch is admitted as-is."""
+    before its batch is admitted as-is. ``inject`` applies one
+    ``faults.FaultPlan`` to every merged batch the daemon forms —
+    daemon-level chaos testing (DESIGN.md §12): the bitwise-degradation
+    invariant means recovered results still populate the shared cache
+    correctly."""
 
     def __init__(self, session: Optional[PoolSession] = None,
                  cache: Optional[ResultCache] = None,
                  state_dir: Optional[str] = None,
-                 max_wait: float = 0.0):
+                 max_wait: float = 0.0,
+                 inject: Optional[FaultPlan] = None):
         if max_wait < 0:
             raise ValueError(f"max_wait must be >= 0, got {max_wait}")
         self.session = session or PoolSession()
+        self.inject = inject
+        self._peak_workers = self.session.n_workers
         self.state_dir = state_dir
         if state_dir:
             os.makedirs(state_dir, exist_ok=True)
@@ -343,9 +367,14 @@ class SubmissionQueue:
             self._thread = None
 
     def stats(self) -> dict:
-        """Daemon counters: tickets, batches, dispatches, cache traffic
-        and the session's compile-cache trace count."""
+        """Daemon counters: tickets, batches, dispatches, cache traffic,
+        the session's compile-cache trace count, and the pool health
+        (``workers``/``status``: a daemon whose pool shrank below its
+        peak width — quarantines, lost workers — keeps serving and
+        reports ``"degraded"`` instead of dying, DESIGN.md §12)."""
         with self._lock:
+            cur = self.session.n_workers
+            self._peak_workers = max(self._peak_workers, cur)
             return {"tickets": len(self._tickets),
                     "pending": len(self._pending),
                     "active_batches": len(self._active),
@@ -354,7 +383,10 @@ class SubmissionQueue:
                     "cache": {"hits": self.cache.hits,
                               "misses": self.cache.misses,
                               "entries": len(self.cache)},
-                    "traces": self.session.total_traces}
+                    "traces": self.session.total_traces,
+                    "workers": cur,
+                    "status": ("degraded" if cur < self._peak_workers
+                               else "ok")}
 
     # -- cache path --------------------------------------------------------
 
@@ -445,19 +477,25 @@ class SubmissionQueue:
         content-derived name so a restarted daemon resumes it. Cells
         carry their ``BitSource`` through admission, so captured buffers
         batch alongside generator positions unchanged."""
-        battery, scale, alpha, backend, _pname, _psig, sov = key
+        battery, scale, alpha, backend, _pname, _psig, sov, inject = key
         offsets = (tuple(c.offset for c in cells)
                    if any(c.offset for c in cells) else None)
         ck = (os.path.join(self.state_dir, f"batch-{digest}.ck")
               if self.state_dir else None)
+        # the merged retry policy keeps the first rider's robustness
+        # knobs (backoff, deadline, quarantine) with the group's most
+        # generous budget; the daemon-level inject plan (chaos testing)
+        # takes precedence over a rider-carried one
         return RunSpec(
             battery, sources=tuple(c.source for c in cells),
             seeds=tuple(c.seed for c in cells), scale=scale,
             policy=riders[0].spec.policy,
-            retry=RetryPolicy(max_retries=max(
-                t.spec.retry.max_retries for t in riders)),
+            retry=dataclasses.replace(
+                riders[0].spec.retry, max_retries=max(
+                    t.spec.retry.max_retries for t in riders)),
             checkpoint_path=ck, alpha=alpha, stop_on_verdict=sov,
-            backend=backend, offsets=offsets)
+            backend=backend, offsets=offsets,
+            inject=self.inject if self.inject is not None else inject)
 
     # -- the daemon's advance ----------------------------------------------
 
@@ -474,7 +512,11 @@ class SubmissionQueue:
     def _advance_batch(self, batch: _Batch) -> bool:
         """Dispatch one round of the batch (or one driver-budgeted
         release pass), finalizing it once the drive policy would stop —
-        the incremental twin of ``BatteryRun.drive``."""
+        the incremental twin of ``BatteryRun.drive``. A batch that
+        exhausts its retry budget with jobs still HELD is routed to
+        ``_fail_batch``: every rider resolves (DONE where its own cells
+        are servable, FAILED otherwise) and the daemon keeps serving —
+        graceful degradation, never a hang (DESIGN.md §12)."""
         h = batch.handle
         if h.pending_rounds:
             before = h.rounds_run
@@ -482,9 +524,11 @@ class SubmissionQueue:
             self.dispatch_rounds += h.rounds_run - before
             if h.pending_rounds or not (h.done or h.cancelled):
                 return True
-        if not (h.done or h.cancelled) and h.held() \
-                and h.driver_retries < h.spec.retry.max_retries:
-            h._driver_release()
+        if not (h.done or h.cancelled) and h.held():
+            if h.driver_retries < h.spec.retry.max_retries:
+                h._driver_release()
+                return True
+            self._fail_batch(batch)
             return True
         self._finalize_batch(batch)
         return True
@@ -527,6 +571,50 @@ class SubmissionQueue:
             self._finalize_ticket(t, per_cell, rounds_run=h.rounds_run,
                                   retries=h.retries,
                                   plan_rounds=h.plan_rounds)
+        self._active.remove(batch)
+
+    def _fail_batch(self, batch: _Batch) -> None:
+        """Resolve a retry-budget-exhausted batch without hanging or
+        poisoning anything: servable cells (complete, or verdict-decided
+        for ``stop_on_verdict`` clients) are still memoized — the cache
+        gate is ``CacheEntry.serves``, so an undecided partial NEVER
+        enters the cache — riders whose own cells are all servable
+        finalize DONE with their demuxed results, and every other rider
+        terminates FAILED with a structured ``failure`` payload (reason,
+        HELD job list, retries spent) that ``Ticket.result()`` surfaces
+        as ``RetryBudgetExhausted``."""
+        h = batch.handle
+        held = [int(j) for j in h.held()]
+        n_total = len(self.session.entries(h.spec))
+        per_res = h.results_by_position()
+        entries = [CacheEntry.from_results(res, n_total, h.spec.alpha)
+                   for res in per_res]
+        for c, entry in zip(batch.cells, entries):
+            if entry.serves(stop_on_verdict=True):   # sellable to someone
+                self.cache.put(c.digest, entry)
+        salvaged = [t for t in batch.tickets if t.state != CANCELLED
+                    and all(entries[p].serves(
+                        stop_on_verdict=t.spec.stop_on_verdict)
+                        for p in t._positions.values())]
+        groups = {t.id: sorted(t._positions.values()) for t in salvaged}
+        sliced = stitch.demux_positions(per_res, groups)
+        for t in batch.tickets:
+            if t.state == CANCELLED:
+                continue
+            if t in salvaged:
+                by_batch_pos = dict(zip(groups[t.id], sliced[t.id]))
+                per_cell = {g: by_batch_pos[p]
+                            for g, p in t._positions.items()}
+                self._finalize_ticket(t, per_cell,
+                                      rounds_run=h.rounds_run,
+                                      retries=h.retries,
+                                      plan_rounds=h.plan_rounds)
+            else:
+                t.failure = {
+                    "reason": (f"retry budget exhausted after "
+                               f"{h.driver_retries} release pass(es)"),
+                    "held_jobs": held, "retries": h.driver_retries}
+                self._terminate(t, FAILED)
         self._active.remove(batch)
 
     def _finalize_ticket(self, ticket: Ticket,

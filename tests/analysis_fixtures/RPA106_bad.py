@@ -1,0 +1,13 @@
+"""BAD: fault-injection API called inside a structurally-traced
+function — the perturbation would bake into the compile cache at trace
+time instead of firing per round on the host (fires RPA106)."""
+import jax
+
+from repro.core.faults import FaultInjector
+
+
+@jax.jit
+def round_fn(row, arrays, plan, round_idx):
+    injector = FaultInjector(plan)
+    events, resize_to = injector.apply_round(round_idx, row, arrays)
+    return arrays

@@ -1,0 +1,19 @@
+"""GOOD: fault injection stays at the host-side runner boundary — the
+traced round function is pure, and the injector perturbs the already-
+fetched host arrays after the dispatch returns (no RPA106)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.faults import FaultInjector
+
+
+@jax.jit
+def round_fn(row):
+    return jnp.sqrt(row)
+
+
+def dispatch(plan, round_idx, row, arrays):
+    out = round_fn(row)
+    injector = FaultInjector(plan)
+    events, resize_to = injector.apply_round(round_idx, row, arrays)
+    return out, events, resize_to

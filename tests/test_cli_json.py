@@ -27,6 +27,8 @@ SERVE_KEYS = {"state", "max_wait", "tickets", "batches",
 SERVE_TICKET_KEYS = {"ticket", "gen", "state", "batch", "cache_hits"}
 SERVE_RESUBMIT_KEYS = {"ticket", "cache_hits", "done_at_submit",
                        "dispatches_added"}
+FAULTS_KEYS = {"plan", "events", "quarantines"}
+FAULT_EVENT_KEYS = {"round", "kind", "slot", "job", "rule", "detail"}
 
 
 def _cli(json_path, *args):
@@ -108,6 +110,34 @@ def test_serve_json_golden_keys(tmp_path):
     assert set(rep["runs"]) == {"splitmix64", "pcg32"}
     for run in rep["runs"].values():
         assert set(run) == PER_GEN_KEYS
+
+
+def test_inject_json_golden_keys(tmp_path):
+    """--inject adds EXACTLY one top-level key ("faults") to the run
+    payload — and only under --inject, so the classic schema is
+    untouched — carrying the plan echo and the fault/quarantine ledger,
+    while the verdict survives the injected faults (exit 0)."""
+    plan = str(tmp_path / "plan.json")
+    with open(plan, "w") as f:
+        json.dump({"seed": 7, "rules": [
+            {"kind": "evict", "round": 0, "slot": 0},
+            {"kind": "corrupt", "round": 1, "slot": 0}]}, f)
+    path = str(tmp_path / "chaos.json")
+    code, rep = _cli(path, "--battery", "smallcrush", "--gen",
+                     "splitmix64", "--scale", "0.01", "--seed", "7",
+                     "--inject", plan)
+    assert code == 0                        # faults degraded, not failed
+    assert set(rep) == RUN_KEYS | {"faults"}
+    faults = rep["faults"]
+    assert set(faults) == FAULTS_KEYS
+    assert faults["plan"]["seed"] == 7
+    assert len(faults["plan"]["rules"]) == 2
+    kinds = [e["kind"] for e in faults["events"]]
+    assert kinds == ["evict", "corrupt", "corrupt_result"]
+    for e in faults["events"]:
+        assert set(e) == FAULT_EVENT_KEYS
+    assert rep["retries"] == 1              # held jobs retried to PASS
+    assert rep["runs"]["splitmix64"]["verdict"] == "PASS"
 
 
 def test_campaign_json_golden_keys(tmp_path):

@@ -1,0 +1,303 @@
+"""The fault-domain layer (DESIGN.md §12): deterministic fault
+injection, the result sanity gate, worker health/quarantine, retry
+backoff, and the graceful-degradation invariant.
+
+The headline property, asserted per fault kind and for composed plans:
+any fault plan that leaves at least one healthy worker yields stitched
+p-values BITWISE identical to the fault-free run — faults cost retry
+rounds, never correctness. Multi-worker behaviour (``lose_worker``,
+quarantine, the degraded daemon) runs as a subprocess scenario
+(tests/faults_scenario.py) because the forced host-device count must be
+set before jax initializes."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.api import PoolSession, RunSpec
+from repro.core.faults import (FAULT_KINDS, FaultInjector, FaultPlan,
+                               FaultRule, WorkerHealth, _bit_flip)
+from repro.core.policies import RetryBudgetExhausted, RetryPolicy
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCALE = 0.0625
+
+
+@pytest.fixture(scope="module")
+def session():
+    return PoolSession()
+
+
+@pytest.fixture(scope="module")
+def clean(session):
+    """The fault-free baseline every parity test compares against."""
+    return session.submit(
+        RunSpec("smallcrush", "splitmix64", 7, scale=SCALE)).result()
+
+
+def chaos(session, rules, retry=None, **kw):
+    """Submit the baseline spec with a fault plan; return the handle."""
+    return session.submit(
+        RunSpec("smallcrush", "splitmix64", 7, scale=SCALE,
+                retry=retry or RetryPolicy(),
+                inject=FaultPlan(rules=tuple(rules)), **kw))
+
+
+# ------------------------------------------------------- plan validation
+
+def test_fault_rule_validation():
+    with pytest.raises(ValueError):
+        FaultRule("explode")
+    with pytest.raises(ValueError):
+        FaultRule("evict", p=0.0)
+    with pytest.raises(ValueError):
+        FaultRule("evict", p=1.5)
+    with pytest.raises(ValueError):
+        FaultRule("evict", round=-1)
+    with pytest.raises(ValueError):
+        FaultRule("evict", slot=-2)
+    with pytest.raises(ValueError):
+        FaultRule("straggle", delay_s=-1.0)
+    with pytest.raises(ValueError):
+        FaultRule("lose_worker", width=0)
+    assert FaultRule("evict").p == 1.0
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(seed=9, rules=(
+        FaultRule("evict", round=0, slot=1),
+        FaultRule("corrupt", job=3, p=0.5),
+        FaultRule("straggle", round=2, delay_s=7.5),
+        FaultRule("lose_worker", round=1, width=2)))
+    assert FaultPlan.from_dict(plan.to_dict()) == plan
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    assert FaultPlan.load(path) == plan
+    # defaults are elided from the wire shape
+    d = FaultRule("evict").to_dict()
+    assert d == {"kind": "evict"}
+    with pytest.raises(ValueError):
+        FaultPlan.from_dict({"rules": [{"kind": "explode"}]})
+
+
+def test_runspec_rejects_non_plan_inject():
+    with pytest.raises(TypeError):
+        RunSpec("smallcrush", "splitmix64", 7, inject={"seed": 0})
+
+
+# ------------------------------------------------ deterministic drawing
+
+def test_probabilistic_draws_replay_from_plan_and_seed():
+    plan = FaultPlan(seed=11, rules=(FaultRule("evict", p=0.5),))
+    row = np.arange(4)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    hist_a = [a.matches(r, row) for r in range(64)]
+    hist_b = [b.matches(r, row) for r in range(64)]
+    assert hist_a == hist_b                     # bit-for-bit replay
+    fired = sum(len(m) for m in hist_a)
+    assert 0 < fired < 64 * 4                   # actually Bernoulli(.5)
+    other = FaultInjector(FaultPlan(seed=12, rules=plan.rules))
+    assert [other.matches(r, row) for r in range(64)] != hist_a
+
+
+def test_idle_slots_never_fault():
+    inj = FaultInjector(FaultPlan(rules=(FaultRule("evict"),)))
+    row = np.asarray([3, -1, 5])
+    assert [(s) for _i, _r, s in inj.matches(0, row)] == [0, 2]
+
+
+def test_bit_flip_always_escapes_the_unit_interval():
+    """The corruption model must be gate-detectable for EVERY valid p:
+    flipping the top exponent bit maps [0, 1] outside [0, 1]."""
+    for p in (0.0, 5e-324, 1e-300, 1e-9, 0.25, 0.5, 0.9999, 1.0):
+        bad = _bit_flip(p)
+        assert not (np.isfinite(bad) and 0.0 <= bad <= 1.0), (p, bad)
+
+
+def test_worker_health_streaks():
+    h = WorkerHealth()
+    h.record(0, True)
+    h.record(0, True)
+    h.record(1, False)
+    assert h.consecutive(0) == 2 and h.consecutive(1) == 0
+    assert h.flaky(2) == [0]
+    h.record(0, False)                          # clean round resets
+    assert h.flaky(2) == [] and h.total_faults == 2
+    h.reset()
+    assert h.consecutive(0) == 0
+
+
+# -------------------------------------- per-kind bitwise parity (W = 1)
+
+def test_evict_parity(session, clean):
+    h = chaos(session, [FaultRule("evict", round=0)])
+    res = h.result()
+    assert res.results == clean.results         # bitwise
+    assert res.verdict.decision == clean.verdict.decision
+    assert res.retries == 1
+    assert [e.kind for e in h.fault_events] == ["evict"]
+
+
+def test_corrupt_parity_and_sanity_gate(session, clean):
+    h = chaos(session, [FaultRule("corrupt", round=0)])
+    res = h.result()
+    assert res.results == clean.results
+    kinds = [e.kind for e in h.fault_events]
+    assert kinds == ["corrupt", "corrupt_result"]
+    gated = h.fault_events[1]
+    assert gated.rule == -1 and "must be finite" in gated.detail
+    assert res.retries == 1                     # HELD + retried, silently
+
+
+def test_straggle_past_deadline_goes_held(session, clean):
+    h = chaos(session, [FaultRule("straggle", round=0, delay_s=60.0)],
+              retry=RetryPolicy(deadline=30.0))
+    res = h.result()
+    assert res.results == clean.results
+    assert res.retries == 1
+    (ev,) = h.fault_events
+    assert ev.kind == "straggle" and "HELD" in ev.detail
+
+
+def test_straggle_without_deadline_is_ledger_only(session, clean):
+    h = chaos(session, [FaultRule("straggle", round=0, delay_s=60.0)])
+    res = h.result()
+    assert res.results == clean.results
+    assert res.retries == 0                     # simulated latency only
+    (ev,) = h.fault_events
+    assert "no deadline set" in ev.detail
+
+
+def test_composed_plan_parity(session, clean):
+    h = chaos(session, [FaultRule("evict", round=0),
+                        FaultRule("corrupt", round=1),
+                        FaultRule("straggle", round=2, delay_s=60.0)],
+              retry=RetryPolicy(max_retries=3, deadline=30.0))
+    res = h.result()
+    assert res.results == clean.results
+    assert res.verdict.decision == clean.verdict.decision
+    kinds = {e.kind for e in h.fault_events}
+    assert kinds == {"evict", "corrupt", "corrupt_result", "straggle"}
+
+
+def test_fault_ledger_replays_bit_for_bit(session):
+    """Same (plan, seed) against the same schedule: identical ledgers."""
+    rules = [FaultRule("corrupt", p=0.5, slot=0)]
+    retry = RetryPolicy(max_retries=8)
+    a = chaos(session, rules, retry=retry)
+    ra = a.result()
+    b = chaos(session, rules, retry=retry)
+    rb = b.result()
+    assert [e.to_dict() for e in a.fault_events] \
+        == [e.to_dict() for e in b.fault_events]
+    assert ra.results == rb.results
+
+
+def test_checkpoint_resume_mid_fault(tmp_path, clean):
+    """Crash after the faulted round, resume in a fresh session: the
+    stitched results still reconcile bitwise with the clean run."""
+    ck = str(tmp_path / "chaos.ck")
+    spec = RunSpec("smallcrush", "splitmix64", 7, scale=SCALE,
+                   checkpoint_path=ck,
+                   inject=FaultPlan(rules=(FaultRule("evict", round=0),)))
+    s1 = PoolSession()
+    h1 = s1.submit(spec)
+    h1.poll()                                   # round 0: the eviction
+    assert [e.kind for e in h1.fault_events] == ["evict"]
+    del h1                                      # "crash" mid-battery
+    res = PoolSession().submit(spec).result()
+    assert res.results == clean.results
+
+
+# ------------------------------------------------- exhaustion semantics
+
+def test_exhaustion_raises_with_held_jobs(session):
+    h = chaos(session, [FaultRule("corrupt", job=0)],
+              retry=RetryPolicy(max_retries=1))
+    with pytest.raises(RetryBudgetExhausted) as ei:
+        h.result()
+    assert ei.value.held == [0]
+    assert ei.value.retries == 1
+    assert "retry budget exhausted" in str(ei.value)
+
+
+def test_exhaustion_nonraising_drive_gives_up_quietly(session):
+    h = chaos(session, [FaultRule("corrupt", job=0)],
+              retry=RetryPolicy(max_retries=1))
+    h.drive(raise_on_exhausted=False)
+    assert h.held() == [0]
+    assert h.driver_retries == 1
+
+
+def test_manual_release_is_budget_free_under_faults(session):
+    """condor_release by hand never spends the driver budget — even a
+    zero-budget policy lets a user hand-release until the transient
+    fault clears (round indices advance, so a round-pinned rule cannot
+    re-fire on the retry)."""
+    h = chaos(session, [FaultRule("evict", round=0)],
+              retry=RetryPolicy(max_retries=0))
+    while h._queue:
+        h.poll()
+    assert h.held() and h.release() > 0
+    res = h.result()                            # nothing left to retry
+    assert h.driver_retries == 0 and res.retries == 1
+
+
+# ------------------------------------------------- retry policy surface
+
+def test_retry_policy_validation():
+    for bad in (dict(max_retries=-1), dict(backoff_base=-0.1),
+                dict(backoff_mult=0.5), dict(backoff_max=-1.0),
+                dict(deadline=0.0), dict(quarantine_after=0)):
+        with pytest.raises(ValueError):
+            RetryPolicy(**bad)
+
+
+def test_backoff_deterministic_and_capped():
+    p = RetryPolicy(backoff_base=1.0, backoff_mult=2.0, backoff_max=5.0)
+    delays = [p.backoff_for(a) for a in range(8)]
+    assert delays == [p.backoff_for(a) for a in range(8)]
+    assert all(d <= 5.0 for d in delays)
+    assert delays[-1] == 5.0                    # cap binds eventually
+    # jittered exponential: within [base*mult^a, 1.1 * that]
+    assert 1.0 <= delays[0] <= 1.1 and 2.0 <= delays[1] <= 2.2
+    assert RetryPolicy().backoff_for(3) == 0.0  # off by default
+
+
+# ------------------------------------- multi-worker scenario (W = 4)
+
+@pytest.fixture(scope="module")
+def scenario(tmp_path_factory):
+    """Run the 4-device subprocess scenario once; share its JSON verdict."""
+    tmp = str(tmp_path_factory.mktemp("faults"))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)                  # the scenario forces its own
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "faults_scenario.py"),
+         tmp], capture_output=True, text=True, env=env, check=True)
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_lose_worker_bitwise(scenario):
+    assert scenario["lose_worker_bitwise"]
+    assert scenario["lose_worker_final_w"] == 3
+    assert scenario["lose_worker_events"] == ["lose_worker"]
+
+
+def test_quarantine_walks_pool_down_bitwise(scenario):
+    assert scenario["quarantine_bitwise"]
+    assert scenario["quarantine_verdict"]
+    assert len(scenario["quarantines"]) >= 2    # 4 -> 3 -> 2
+    assert scenario["final_workers"] < 4
+    assert scenario["quarantines"][0]["slots"] == [1]
+
+
+def test_degraded_daemon_keeps_serving(scenario):
+    assert scenario["serve_state"]              # ticket DONE, not hung
+    assert scenario["serve_bitwise"]
+    assert scenario["serve_status"] == "degraded"
+    assert scenario["serve_workers"] < 4

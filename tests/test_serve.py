@@ -11,9 +11,11 @@ import pytest
 
 from repro.core import stitch
 from repro.core.api import BatteryRun, CampaignSpec, PoolSession, RunSpec
-from repro.core.policies import RetryPolicy
-from repro.serve import (CacheEntry, ResultCache, SubmissionQueue,
-                         admission_key, cell_digest, spec_cells)
+from repro.core.faults import FaultPlan, FaultRule
+from repro.core.policies import RetryBudgetExhausted, RetryPolicy
+from repro.serve import (DONE, FAILED, CacheEntry, ResultCache,
+                         SubmissionQueue, admission_key, cell_digest,
+                         spec_cells)
 
 SCALE = 0.01
 NAN = float("nan")
@@ -61,11 +63,12 @@ def test_manual_release_does_not_spend_driver_budget(session, monkeypatch):
     assert run.held() == [0]
     assert run.release() == 1                   # manual — must be FREE
     assert (run.retries, run.driver_retries) == (1, 0)
-    res = run.result()
+    with pytest.raises(RetryBudgetExhausted) as ei:
+        run.result()                            # job 0 never recovers
     # the driver still got its FULL budget of 2 after the manual release
     assert run.driver_retries == 2
     assert run.retries == 3                     # 1 manual + 2 driver
-    assert "MISSING/HELD" in res.report         # job 0 never recovered
+    assert ei.value.held == [0]
 
 
 def test_stream_drives_hold_release_rounds(session, monkeypatch):
@@ -274,3 +277,66 @@ def test_background_daemon_thread(tmp_path):
         queue.stop()
     assert not queue.serving
     assert threading.active_count() >= 1        # thread joined cleanly
+
+
+# ---------------------------------------------- fault-domain terminal states
+
+PERSISTENT_CORRUPT = FaultPlan(rules=(FaultRule("corrupt", job=0),))
+
+
+def test_budget_exhausted_batch_fails_every_ticket(tmp_path):
+    """ISSUE 9 satellite: budget exhaustion mid-batch resolves EVERY
+    member ticket into the FAILED terminal state with a structured
+    failure payload — ``drain()`` returns, nothing hangs, and
+    ``result()`` raises instead of returning partial data."""
+    queue = SubmissionQueue(session=PoolSession(),
+                            state_dir=str(tmp_path / "state"),
+                            inject=PERSISTENT_CORRUPT)
+    t1 = queue.submit(_spec("splitmix64",
+                            retry=RetryPolicy(max_retries=1)))
+    t2 = queue.submit(_spec("pcg32", retry=RetryPolicy(max_retries=1)))
+    queue.drain()                               # must terminate, not hang
+    assert t1.batch_id == t2.batch_id           # one merged batch...
+    for t in (t1, t2):
+        assert t.state == FAILED and t.done     # ...both tickets resolved
+        assert t.failure["held_jobs"] == [0]
+        assert "retry budget exhausted" in t.failure["reason"]
+        assert t.status()["failure"]["retries"] == 1
+        with pytest.raises(RetryBudgetExhausted) as ei:
+            t.result()
+        assert ei.value.held == [0]
+
+
+def test_failed_batch_does_not_poison_cache(tmp_path):
+    """A failed batch must never serve a poisoned partial: a fresh
+    fault-free daemon on the same state dir MISSES the cache for the
+    undecided cell and completes it cleanly."""
+    state = str(tmp_path / "state")
+    q1 = SubmissionQueue(session=PoolSession(), state_dir=state,
+                         inject=PERSISTENT_CORRUPT)
+    t = q1.submit(_spec(retry=RetryPolicy(max_retries=1)))
+    q1.drain()
+    assert t.state == FAILED
+    q2 = SubmissionQueue(session=PoolSession(), state_dir=state)
+    t2 = q2.submit(_spec())
+    assert not t2.done                          # no cache hit at submit
+    q2.drain()
+    assert t2.state == DONE
+    res = t2.result()
+    assert res.verdict.decision == stitch.PASS
+    assert len(res.results) == 10               # complete, job 0 re-run
+    assert all(np.isfinite(p) for _s, p in res.results.values())
+
+
+def test_queue_inject_key_and_stats_health(tmp_path):
+    """The fault plan participates in admission compatibility, and
+    ``stats()`` reports pool health (ok at launch width)."""
+    k_clean = admission_key(_spec())
+    k_chaos = admission_key(_spec(inject=PERSISTENT_CORRUPT))
+    assert k_clean != k_chaos                   # never merged together
+    queue = SubmissionQueue(session=PoolSession(),
+                            state_dir=str(tmp_path / "state"))
+    queue.submit(_spec())
+    queue.drain()
+    st = queue.stats()
+    assert st["status"] == "ok" and st["workers"] >= 1
