@@ -20,6 +20,11 @@ from repro.core.campaign import (  # noqa: F401
     CampaignResult,
     screen,
 )
+from repro.core.evidence import (  # noqa: F401
+    EvidenceVerdict,
+    VerdictEngineMismatch,
+    evidence_verdict,
+)
 from repro.core.faults import (  # noqa: F401
     CorruptResultError,
     FaultEvent,
@@ -37,6 +42,8 @@ from repro.core.policies import (  # noqa: F401
     register_policy,
 )
 from repro.core.stitch import (  # noqa: F401
+    VERDICT_ENGINES,
     Verdict,
     sequential_verdict,
+    verdict_for,
 )

@@ -114,6 +114,15 @@ class RunSpec:
     ``stop_on_verdict=True`` cancels pending work for a generator as soon
     as its verdict is definitive.
 
+    ``verdict_engine`` picks WHICH engine judges the interim looks
+    (stitch.VERDICT_ENGINES): ``"bonferroni"`` is the classic
+    Bonferroni-sequential spending rule; ``"evalue"`` is the anytime-
+    valid e-process engine (core/evidence.py, DESIGN.md §13) that FAILs
+    when calibrated e-value wealth reaches ``1/alpha`` and records a
+    wealth trajectory per generator. Both share alpha and the verdict
+    surface, so everything downstream (checkpoints, campaigns, serve,
+    CLI) is engine-agnostic.
+
     ``backend`` selects the test-kernel implementation family-wide
     (stats/backends.py): "reference" (pure-jnp), "accelerated" (Pallas
     kernels) or "auto" (accelerated on real TPU hardware, reference under
@@ -159,6 +168,7 @@ class RunSpec:
     progress: Union[bool, Callable] = False  # repro: runtime-arg
     alpha: float = 0.01  # repro: runtime-arg
     stop_on_verdict: bool = False  # repro: runtime-arg
+    verdict_engine: str = "bonferroni"  # repro: runtime-arg
     backend: str = "auto"
     offsets: Optional[Union[int, Tuple[int, ...]]] = None
     sources: Optional[Tuple] = None
@@ -209,6 +219,7 @@ class RunSpec:
         get_policy(self.policy)                  # validate early
         if not (0.0 < self.alpha < 1.0):
             raise ValueError(f"alpha must be in (0, 1), got {self.alpha}")
+        stitch.verdict_for(self.verdict_engine)  # validate early
         if self.backend not in kernel_backends.BACKENDS:
             raise KeyError(f"unknown backend {self.backend!r}; "
                            f"known: {kernel_backends.BACKENDS}")
@@ -293,39 +304,48 @@ class BatteryResult:
 
 
 # ---------------------------------------------------------------------------
-# checkpoint layout (v4: job-id keyed, worker-count independent,
-# source-identity pinned)
+# checkpoint layout (v5: job-id keyed, worker-count independent,
+# source-identity pinned, verdict-engine aware)
 
-CKPT_VERSION = 4
+CKPT_VERSION = 5
 
 
 @dataclasses.dataclass
 class Checkpoint:
-    """On-disk battery progress — v4, keyed by JOB ID, never by
+    """On-disk battery progress — v5, keyed by JOB ID, never by
     (round, worker) position. The layout is a pure function of the job
     table, so a checkpoint written on a W=8 mesh resumes bitwise on W=4
     (or any width) after elastic re-meshing (DESIGN.md §6).
 
     Wire layouts (``ckpt/io`` leaves)::
 
-      v4 (written): [version, job_idx (K,), stats (G, K), ps (G, K),
+      v5 (written): [version, job_idx (K,), stats (G, K), ps (G, K),
                      decisions (G,) int8 — empty when absent, rounds_run,
                      alpha — nan when absent, source_uids (G,) bytes —
-                     empty when absent]
+                     empty when absent, engine (1,) bytes,
+                     log_wealth (G,) float64 — empty when absent]
+      v4 (read):    v5 without the trailing engine + log_wealth leaves
       v3 (read):    v4 without the trailing source_uids leaf
       v2 (read):    [job_idx, stats, ps, decisions, rounds_run]
       v1 (read):    [job_idx, stats, ps]    (stats flat for one generator)
 
-    Loading a v1/v2/v3 file works transparently; the next save upgrades
-    it to v4. ``decisions`` carries the sequential-verdict codes (see
+    Loading a v1..v4 file works transparently; the next save upgrades
+    it to v5. ``decisions`` carries the verdict codes (see
     ``BatteryRun._DECISION_CODE``); ``None`` means no verdict state.
     ``alpha`` records which error rate the decisions were computed
     under — a resuming run adopts them only when its own alpha matches
-    (they are a pure function of (results, alpha)). ``source_uids``
-    pins each generator position's BitSource identity
-    (``BitSource.uid()``): for captured sources the uid embeds the
-    file's content digest, so a checkpoint written against one capture
-    REFUSES to resume against a re-captured (byte-different) file."""
+    (they are a pure function of (results, alpha)). ``engine`` names the
+    verdict engine that produced the decisions (v1..v4 files imply
+    ``"bonferroni"``); resuming verdict state under a DIFFERENT engine
+    raises ``VerdictEngineMismatch`` — the engines' decisions are not
+    comparable. ``log_wealth`` snapshots each generator's accumulated
+    e-process wealth under the ``evalue`` engine (DESIGN.md §13); it is
+    advisory (wealth is recomputed from results on load) but makes the
+    trajectory inspectable on disk. ``source_uids`` pins each generator
+    position's BitSource identity (``BitSource.uid()``): for captured
+    sources the uid embeds the file's content digest, so a checkpoint
+    written against one capture REFUSES to resume against a re-captured
+    (byte-different) file."""
     job_idx: np.ndarray                         # (K,) int32 job ids
     stats: np.ndarray                           # (G, K) float64
     ps: np.ndarray                              # (G, K) float64
@@ -333,6 +353,8 @@ class Checkpoint:
     rounds_run: int = 0
     alpha: Optional[float] = None               # decisions' error rate
     source_uids: Optional[np.ndarray] = None    # (G,) bytes BitSource.uid
+    engine: str = "bonferroni"                  # decisions' verdict engine
+    log_wealth: Optional[np.ndarray] = None     # (G,) float64 e-wealth
     version: int = CKPT_VERSION
 
     @property
@@ -342,14 +364,35 @@ class Checkpoint:
 
     @classmethod
     def load(cls, path: str) -> "Checkpoint":
-        """Read any supported layout (v1/v2/v3/v4) into the v4 shape."""
+        """Read any supported layout (v1..v5) into the v5 shape."""
         leaves = ckpt_io.load_flat(path)
-        if len(leaves) == 8:                    # v4: source identity
-            ver, idx, st, pv, dec, rounds, alpha, uids = leaves
+        if len(leaves) == 10:                   # v5: verdict engine
+            (ver, idx, st, pv, dec, rounds, alpha, uids, eng, lw) = leaves
             if int(ver) != CKPT_VERSION:
                 raise ValueError(
                     f"checkpoint {path} declares version {int(ver)}; "
-                    f"this build reads v1/v2/v3/v{CKPT_VERSION}")
+                    f"this build reads v1..v{CKPT_VERSION}")
+            dec = np.asarray(dec, np.int8)
+            alpha = float(alpha)
+            uids = np.asarray(uids)
+            eng = np.asarray(eng)
+            lw = np.asarray(lw, np.float64)
+            return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
+                       np.atleast_2d(pv), dec if dec.size else None,
+                       int(rounds),
+                       None if np.isnan(alpha) else alpha,
+                       uids if uids.size else None,
+                       engine=(bytes(eng.reshape(-1)[0]).decode()
+                               if eng.size else "bonferroni"),
+                       log_wealth=lw if lw.size else None,
+                       version=CKPT_VERSION)
+        if len(leaves) == 8:                    # v4: source identity
+            ver, idx, st, pv, dec, rounds, alpha, uids = leaves
+            if int(ver) != 4:
+                raise ValueError(
+                    f"checkpoint {path} declares version {int(ver)} in an "
+                    f"8-leaf (v4) layout; this build reads "
+                    f"v1..v{CKPT_VERSION}")
             dec = np.asarray(dec, np.int8)
             alpha = float(alpha)
             uids = np.asarray(uids)
@@ -357,47 +400,49 @@ class Checkpoint:
                        np.atleast_2d(pv), dec if dec.size else None,
                        int(rounds),
                        None if np.isnan(alpha) else alpha,
-                       uids if uids.size else None, CKPT_VERSION)
+                       uids if uids.size else None, version=4)
         if len(leaves) == 7:                    # v3: no source identity
             ver, idx, st, pv, dec, rounds, alpha = leaves
             if int(ver) != 3:
                 raise ValueError(
                     f"checkpoint {path} declares version {int(ver)} in a "
-                    f"7-leaf (v3) layout; this build reads v1/v2/v3/"
-                    f"v{CKPT_VERSION}")
+                    f"7-leaf (v3) layout; this build reads "
+                    f"v1..v{CKPT_VERSION}")
             dec = np.asarray(dec, np.int8)
             alpha = float(alpha)
             return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
                        np.atleast_2d(pv), dec if dec.size else None,
                        int(rounds),
-                       None if np.isnan(alpha) else alpha, None, 3)
+                       None if np.isnan(alpha) else alpha, None, version=3)
         if len(leaves) == 5:                    # v2: verdict state present
             idx, st, pv, dec, rounds = leaves
             return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
                        np.atleast_2d(pv),
                        np.atleast_1d(np.asarray(dec, np.int8)),
-                       int(rounds), None, None, 2)
+                       int(rounds), None, None, version=2)
         if len(leaves) == 3:                    # v1: classic results-only
             idx, st, pv = leaves
             return cls(np.asarray(idx, np.int32), np.atleast_2d(st),
-                       np.atleast_2d(pv), None, 0, None, None, 1)
+                       np.atleast_2d(pv), None, 0, None, None, version=1)
         raise ValueError(
             f"checkpoint {path} has {len(leaves)} leaves; expected 3 (v1), "
-            f"5 (v2), 7 (v3) or 8 (v{CKPT_VERSION})")
+            f"5 (v2), 7 (v3), 8 (v4) or 10 (v{CKPT_VERSION})")
 
     def save(self, path: str) -> None:
-        """Write the v4 layout (whatever version was loaded)."""
+        """Write the v5 layout (whatever version was loaded)."""
         dec = (np.zeros((0,), np.int8) if self.decisions is None
                else np.asarray(self.decisions, np.int8))
         uids = (np.zeros((0,), "S1") if self.source_uids is None
                 else np.asarray(self.source_uids))
+        lw = (np.zeros((0,), np.float64) if self.log_wealth is None
+              else np.asarray(self.log_wealth, np.float64))
         ckpt_io.save(path, [
             np.int64(CKPT_VERSION), np.asarray(self.job_idx, np.int32),
             np.atleast_2d(np.asarray(self.stats, np.float64)),
             np.atleast_2d(np.asarray(self.ps, np.float64)),
             dec, np.int64(self.rounds_run),
             np.float64(np.nan if self.alpha is None else self.alpha),
-            uids])
+            uids, np.asarray([self.engine.encode()]), lw])
 
     def drop(self, job_ids) -> "Checkpoint":
         """A copy with the given jobs knocked out (simulated node loss /
@@ -407,7 +452,8 @@ class Checkpoint:
         keep = ~np.isin(self.job_idx, np.asarray(list(job_ids), np.int32))
         return dataclasses.replace(
             self, job_idx=self.job_idx[keep], stats=self.stats[:, keep],
-            ps=self.ps[:, keep], decisions=None, version=CKPT_VERSION)
+            ps=self.ps[:, keep], decisions=None, log_wealth=None,
+            version=CKPT_VERSION)
 
     def results(self) -> List[Dict[int, tuple]]:
         """Per-generator {job_id: (stat, p)} — the in-memory form."""
@@ -444,7 +490,19 @@ class CampaignSpec:
     captured files included — a campaign can screen a nonce dump's
     sub-streams next to in-repo generators. ``generators=`` remains the
     back-compat spelling; after construction both fields are populated
-    (``generators`` holds reporting names)."""
+    (``generators`` holds reporting names).
+
+    ``verdict_engine`` mirrors ``RunSpec.verdict_engine``: under
+    ``"evalue"`` every cell accumulates e-process wealth across waves in
+    the ledger and is knocked out when wealth reaches ``1/alpha``
+    (DESIGN.md §13). ``continue_band`` is the optional-continuation
+    band: a cell that finishes the last scheduled wave UNDECIDED with
+    wealth in ``[continue_band/alpha, 1/alpha)`` is *re-opened* — a
+    fresh continuation phase over previously unread stream words is
+    appended instead of force-deciding the cell — up to
+    ``max_continuations`` times (0 disables; band 0 force-decides like
+    the Bonferroni engine). Both knobs are inert under
+    ``"bonferroni"``."""
     battery: str
     generators: Tuple[str, ...] = ()
     n_streams: int = 1
@@ -459,6 +517,9 @@ class CampaignSpec:
     ledger_path: Optional[str] = None
     progress: Union[bool, Callable] = False
     sources: Optional[Tuple] = None
+    verdict_engine: str = "bonferroni"
+    continue_band: float = 0.5
+    max_continuations: int = 1
 
     def __post_init__(self):
         if self.battery not in BATTERY_SIZES:
@@ -501,6 +562,23 @@ class CampaignSpec:
                            f"known: {kernel_backends.BACKENDS}")
         if self.span is not None and self.span < 1:
             raise ValueError(f"span must be >= 1, got {self.span}")
+        stitch.verdict_for(self.verdict_engine)  # validate early
+        if not (0.0 <= self.continue_band < 1.0):
+            raise ValueError(f"continue_band must be in [0, 1), "
+                             f"got {self.continue_band}")
+        if self.max_continuations < 0:
+            raise ValueError(f"max_continuations must be >= 0, "
+                             f"got {self.max_continuations}")
+        if (self.verdict_engine != "bonferroni" and self.max_continuations
+                and self.continue_band > 0.0):
+            # continuation phases read fresh words past every stream's
+            # scheduled block, which needs jump-ahead
+            bad = [s.name for s in srcs if not s.counter_based]
+            if bad:
+                raise ValueError(
+                    f"optional continuation needs offset-continuable "
+                    f"generators; {bad} are not COUNTER_BASED (set "
+                    f"max_continuations=0 or continue_band=0.0)")
 
     @property
     def cells(self) -> List[Tuple[str, int]]:
@@ -528,7 +606,10 @@ class CampaignSpec:
         each cell screens: a re-captured file is a different campaign
         and refuses the old ledger. Generator-only campaigns fold
         exactly the pre-BitSource key, so their stored ledger digests
-        still match. Stored in the ledger so a resume against a
+        still match; likewise the verdict engine (plus its continuation
+        knobs) is folded only when non-default, so Bonferroni ledgers
+        keep their historical digests while an e-value campaign can
+        never resume — or be resumed by — a Bonferroni ledger. Stored in the ledger so a resume against a
         reconfigured campaign is refused instead of silently replaying
         decisions made under different settings. ``backend`` is
         deliberately excluded: both backends are parity-asserted to
@@ -542,12 +623,17 @@ class CampaignSpec:
         captured = tuple(s.uid() for s in self.sources if s.captured)
         if captured:
             parts = parts + (captured,)
+        if self.verdict_engine != "bonferroni":
+            # folded only when non-default so every pre-engine ledger
+            # digest stays byte-identical (same pattern as captured uids)
+            parts = parts + (("engine", self.verdict_engine,
+                              self.continue_band, self.max_continuations),)
         key = repr(parts)
         return int.from_bytes(
             hashlib.sha256(key.encode()).digest()[:8], "big")
 
 
-CAMPAIGN_LEDGER_VERSION = 2
+CAMPAIGN_LEDGER_VERSION = 3
 
 # cell decision codes shared by the ledger and the campaign driver
 # (0/1/2 match BatteryRun._DECISION_CODE; the phase axis is the ledger's)
@@ -564,26 +650,38 @@ class CampaignLedger:
 
     Wire layouts (``ckpt/io`` leaves)::
 
-      v2 (written): [version, gen_ids (C,) int32, streams (C,) int32,
+      v3 (written): [version, gen_ids (C,) int32, streams (C,) int32,
                      decisions (C,) int8, decided_phase (C,) int8
                      (-1 = undecided), phases_done, alpha,
-                     spec_digest uint64, source_uids (C,) bytes]
+                     spec_digest uint64, source_uids (C,) bytes,
+                     log_wealth (C,) float64 — empty when absent,
+                     engine (1,) bytes, continuations int64]
+      v2 (read):    v3 without the trailing log_wealth + engine +
+                    continuations leaves
       v1 (read):    v2 without the trailing source_uids leaf
 
-    A v1 ledger loads transparently; the next save upgrades it to v2.
+    A v1/v2 ledger loads transparently; the next save upgrades it to v3.
     ``source_uids`` pins each cell's BitSource identity
     (``BitSource.uid()``; captured cells carry ``gen_id`` -1 plus a
     content-bearing uid, so a re-captured file refuses the ledger).
     ``decisions`` carries ``CELL_UNDECIDED/CELL_PASS/CELL_FAIL``;
     ``decided_phase`` records WHICH phase decided the cell (0 = stream
-    check when enabled, then the waves in ascending-scale order).
-    ``phases_done`` counts completed phases, so a resumed campaign
-    re-enters the phase list exactly where it stopped; a phase
-    interrupted mid-battery additionally resumes from its own per-phase
-    run checkpoint (``<ledger>.phaseK``). ``spec_digest`` pins the full
-    decision-relevant configuration (``CampaignSpec.digest``) — resuming
-    with a different battery, waves, seed, alpha, policy, stream_check
-    or span is refused, not silently replayed."""
+    check when enabled, then the waves in ascending-scale order, then
+    any continuation phases). ``phases_done`` counts completed phases,
+    so a resumed campaign re-enters the phase list exactly where it
+    stopped; a phase interrupted mid-battery additionally resumes from
+    its own per-phase run checkpoint (``<ledger>.phaseK``).
+    ``log_wealth`` accumulates each cell's e-process wealth across
+    phases under the ``evalue`` engine (DESIGN.md §13) — it is DECISION
+    state, persisted with the decisions it feeds, which is what makes
+    optional continuation resume-safe. ``engine`` names the verdict
+    engine (v1/v2 files imply ``"bonferroni"``); ``continuations``
+    counts how many continuation phases have been opened, so a resumed
+    campaign reconstructs the exact phase list. ``spec_digest`` pins the
+    full decision-relevant configuration (``CampaignSpec.digest``) —
+    resuming with a different battery, waves, seed, alpha, policy,
+    stream_check, span or verdict engine is refused, not silently
+    replayed."""
     gen_ids: np.ndarray
     streams: np.ndarray
     decisions: np.ndarray
@@ -592,6 +690,9 @@ class CampaignLedger:
     alpha: Optional[float] = None
     spec_digest: int = 0
     source_uids: Optional[np.ndarray] = None    # (C,) bytes BitSource.uid
+    log_wealth: Optional[np.ndarray] = None     # (C,) float64 e-wealth
+    engine: str = "bonferroni"                  # decisions' verdict engine
+    continuations: int = 0                      # continuation phases opened
     version: int = CAMPAIGN_LEDGER_VERSION
 
     @staticmethod
@@ -612,19 +713,44 @@ class CampaignLedger:
                            for src, _ in spec.cell_sources])
         return cls(gids, streams,
                    np.zeros((c,), np.int8), np.full((c,), -1, np.int8),
-                   0, spec.alpha, spec.digest(), uids)
+                   0, spec.alpha, spec.digest(), uids,
+                   log_wealth=np.zeros((c,), np.float64),
+                   engine=spec.verdict_engine)
 
     @classmethod
     def load(cls, path: str) -> "CampaignLedger":
-        """Read (and version-check) a v1 or v2 ledger file."""
+        """Read (and version-check) a v1, v2 or v3 ledger file."""
         leaves = ckpt_io.load_flat(path)
-        if len(leaves) == 9:                    # v2: source identity
-            ver, gids, streams, dec, phase, done, alpha, digest, uids = leaves
+        if len(leaves) == 12:                   # v3: verdict engine
+            (ver, gids, streams, dec, phase, done, alpha, digest, uids,
+             lw, eng, cont) = leaves
             if int(ver) != CAMPAIGN_LEDGER_VERSION:
                 raise ValueError(
                     f"campaign ledger {path} declares version {int(ver)} "
-                    f"in a 9-leaf layout; this build reads "
-                    f"v1/v{CAMPAIGN_LEDGER_VERSION}")
+                    f"in a 12-leaf layout; this build reads "
+                    f"v1/v2/v{CAMPAIGN_LEDGER_VERSION}")
+            uids = np.asarray(uids)
+            alpha = float(alpha)
+            lw = np.asarray(lw, np.float64)
+            eng = np.asarray(eng)
+            return cls(np.asarray(gids, np.int32),
+                       np.asarray(streams, np.int32),
+                       np.asarray(dec, np.int8), np.asarray(phase, np.int8),
+                       int(done), None if np.isnan(alpha) else alpha,
+                       int(np.uint64(digest)),
+                       uids if uids.size else None,
+                       log_wealth=lw if lw.size else None,
+                       engine=(bytes(eng.reshape(-1)[0]).decode()
+                               if eng.size else "bonferroni"),
+                       continuations=int(cont),
+                       version=CAMPAIGN_LEDGER_VERSION)
+        if len(leaves) == 9:                    # v2: source identity
+            ver, gids, streams, dec, phase, done, alpha, digest, uids = leaves
+            if int(ver) != 2:
+                raise ValueError(
+                    f"campaign ledger {path} declares version {int(ver)} "
+                    f"in a 9-leaf (v2) layout; this build reads "
+                    f"v1/v2/v{CAMPAIGN_LEDGER_VERSION}")
             uids = np.asarray(uids)
             alpha = float(alpha)
             return cls(np.asarray(gids, np.int32),
@@ -632,28 +758,29 @@ class CampaignLedger:
                        np.asarray(dec, np.int8), np.asarray(phase, np.int8),
                        int(done), None if np.isnan(alpha) else alpha,
                        int(np.uint64(digest)),
-                       uids if uids.size else None,
-                       CAMPAIGN_LEDGER_VERSION)
+                       uids if uids.size else None, version=2)
         if len(leaves) == 8:                    # v1: no source identity
             ver, gids, streams, dec, phase, done, alpha, digest = leaves
             if int(ver) != 1:
                 raise ValueError(
                     f"campaign ledger {path} declares version {int(ver)} "
                     f"in an 8-leaf (v1) layout; this build reads "
-                    f"v1/v{CAMPAIGN_LEDGER_VERSION}")
+                    f"v1/v2/v{CAMPAIGN_LEDGER_VERSION}")
             alpha = float(alpha)
             return cls(np.asarray(gids, np.int32),
                        np.asarray(streams, np.int32),
                        np.asarray(dec, np.int8), np.asarray(phase, np.int8),
                        int(done), None if np.isnan(alpha) else alpha,
-                       int(np.uint64(digest)), None, 1)
+                       int(np.uint64(digest)), None, version=1)
         raise ValueError(f"campaign ledger {path} has {len(leaves)} "
-                         "leaves; expected 8 (v1) or 9 (v2)")
+                         "leaves; expected 8 (v1), 9 (v2) or 12 (v3)")
 
     def save(self, path: str) -> None:
-        """Write the 9-leaf v2 cell-keyed wire layout (atomic)."""
+        """Write the 12-leaf v3 cell-keyed wire layout (atomic)."""
         uids = (np.zeros((0,), "S1") if self.source_uids is None
                 else np.asarray(self.source_uids))
+        lw = (np.zeros((0,), np.float64) if self.log_wealth is None
+              else np.asarray(self.log_wealth, np.float64))
         ckpt_io.save(path, [
             np.int64(CAMPAIGN_LEDGER_VERSION),
             np.asarray(self.gen_ids, np.int32),
@@ -662,7 +789,9 @@ class CampaignLedger:
             np.asarray(self.decided_phase, np.int8),
             np.int64(self.phases_done),
             np.float64(np.nan if self.alpha is None else self.alpha),
-            np.uint64(self.spec_digest), uids])
+            np.uint64(self.spec_digest), uids, lw,
+            np.asarray([self.engine.encode()]),
+            np.int64(self.continuations)])
 
     def matches(self, spec: CampaignSpec) -> bool:
         """Does this ledger describe exactly this campaign — same cells
@@ -684,6 +813,7 @@ class CampaignLedger:
                 and bool(np.all(self.gen_ids == want_g))
                 and bool(np.all(self.streams == want_s))
                 and (self.alpha is None or self.alpha == spec.alpha)
+                and self.engine == spec.verdict_engine
                 and self.spec_digest == spec.digest())
 
 
@@ -888,13 +1018,19 @@ class BatteryRun:
         self.quarantines: List[dict] = []
         G = spec.n_generators
         self._results: List[Dict[int, tuple]] = [dict() for _ in range(G)]
-        # sequential-verdict state: sticky per-generator decisions; a
-        # decided generator is dropped from scheduling/dispatch when the
-        # spec asks for early stopping
+        # verdict state under the spec's engine (stitch.VERDICT_ENGINES):
+        # sticky per-generator decisions; a decided generator is dropped
+        # from scheduling/dispatch when the spec asks for early stopping
+        self._engine_fn = stitch.verdict_for(spec.verdict_engine)
         self._verdicts: List[stitch.Verdict] = [
-            stitch.sequential_verdict({}, len(self._compiled.entries),
-                                      spec.alpha) for _ in range(G)]
+            self._engine_fn({}, len(self._compiled.entries), spec.alpha)
+            for _ in range(G)]
+        # per-generator wealth trajectory, one sample per dispatched
+        # round (evalue engine only — bonferroni has no wealth)
+        self.wealth_history: List[List[float]] = [[] for _ in range(G)]
         self._restored_decisions: Optional[List[int]] = None
+        self._restored_alpha: Optional[float] = None
+        self._restored_engine: Optional[str] = None
         self._load_checkpoint()
         self._update_verdicts()
         if self._restored_decisions is not None:
@@ -982,6 +1118,9 @@ class BatteryRun:
             self._dispatch(row)
             self.rounds_run += 1
             self._update_verdicts()
+            if self.spec.verdict_engine == "evalue":
+                for g, v in enumerate(self._verdicts):
+                    self.wealth_history[g].append(v.wealth)
             self._auto_cancel()
             self._save_checkpoint()
             if self.spec.progress:
@@ -1046,27 +1185,39 @@ class BatteryRun:
                 f"state for {len(self._restored_decisions)} generator(s), "
                 f"spec has {self.spec.n_generators}")
         code = self._DECISION_CODE
+        saved_alpha = self._restored_alpha
         for g, saved in enumerate(self._restored_decisions):
             if saved != code[self._verdicts[g].decision]:
                 raise ValueError(
                     f"checkpoint {self.spec.checkpoint_path}: generator "
                     f"{self.spec.generators[g]!r} was saved as decision "
-                    f"code {saved} but its saved results recompute to "
-                    f"{self._verdicts[g].decision} under alpha="
+                    f"code {saved} (engine "
+                    f"{self._restored_engine or self.spec.verdict_engine!r}, "
+                    f"checkpoint alpha="
+                    f"{'unrecorded' if saved_alpha is None else saved_alpha}"
+                    f") but its saved results recompute to "
+                    f"{self._verdicts[g].decision} under the spec's "
+                    f"{self.spec.verdict_engine!r} engine at alpha="
                     f"{self.spec.alpha} — resumed with a different spec?")
 
     def _update_verdicts(self) -> None:
-        """Recompute interim verdicts (test-space, after sub-job combine).
-        Decisions are sticky: results never un-complete, so a decided
-        verdict is never revisited — this is what makes resume-after-FAIL
-        stable even if the checkpoint only holds the partial results."""
+        """Recompute interim verdicts (test-space, after sub-job combine)
+        under the spec's engine. Bonferroni decisions are sticky outright
+        (a crossed boundary never un-crosses, so revisiting is pointless);
+        evalue decisions are sticky only under ``stop_on_verdict``, where
+        a decided generator's result set freezes — without early stopping
+        wealth keeps moving as results land (e-values below 1 SHRINK it),
+        and the final verdict must be the checkpoint-resumable pure
+        function of the COMPLETE result set."""
+        sticky = (self.spec.verdict_engine == "bonferroni"
+                  or self.spec.stop_on_verdict)
         for g in range(self.spec.n_generators):
-            if self._verdicts[g].decided:
+            if sticky and self._verdicts[g].decided:
                 continue
             combined = stitch.fold_groups(self._results[g],
                                           self._compiled.jobs,
                                           self._compiled.combine)
-            self._verdicts[g] = stitch.sequential_verdict(
+            self._verdicts[g] = self._engine_fn(
                 combined, len(self._compiled.entries), self.spec.alpha)
 
     def _auto_cancel(self) -> None:
@@ -1370,12 +1521,14 @@ class BatteryRun:
     _DECISION_CODE = {stitch.UNDECIDED: 0, stitch.PASS: 1, stitch.FAIL: 2}
 
     def _save_checkpoint(self) -> None:
-        """Write the v3 layout: results keyed by JOB ID (never by the
+        """Write the v5 layout: results keyed by JOB ID (never by the
         (round, worker) position of the dispatch that produced them), so
         the file is a pure function of the job table and resumes on any
-        pool width. Verdict state always rides along; ``rounds_run`` is
-        adopted on resume only by ``stop_on_verdict`` runs (their round
-        count is part of the sequential-look bookkeeping)."""
+        pool width. Verdict state always rides along — tagged with the
+        engine that computed it, plus the per-generator wealth snapshot
+        under the evalue engine; ``rounds_run`` is adopted on resume
+        only by ``stop_on_verdict`` runs (their round count is part of
+        the sequential-look bookkeeping)."""
         path = self.spec.checkpoint_path
         if not path:
             return
@@ -1388,14 +1541,19 @@ class BatteryRun:
         decisions = np.array([self._DECISION_CODE[v.decision]
                               for v in self._verdicts], np.int8)
         uids = np.asarray([s.uid().encode() for s in self.spec.sources])
+        lw = None
+        if self.spec.verdict_engine == "evalue":
+            lw = np.array([v.log_wealth for v in self._verdicts], np.float64)
         Checkpoint(idx, st, pv, decisions, self.rounds_run,
-                   alpha=self.spec.alpha, source_uids=uids).save(path)
+                   alpha=self.spec.alpha, source_uids=uids,
+                   engine=self.spec.verdict_engine,
+                   log_wealth=lw).save(path)
 
     def _load_checkpoint(self) -> None:
         path = self.spec.checkpoint_path
         if not (path and ckpt_io.exists(path)):
             return
-        ck = Checkpoint.load(path)          # v1/v2 upgrade path lives here
+        ck = Checkpoint.load(path)          # v1..v4 upgrade path lives here
         # Saved decisions are BINDING only for a stop_on_verdict run that
         # uses the SAME alpha they were computed under — there they drive
         # scheduling (decided generators are never re-enqueued) and the
@@ -1404,10 +1562,25 @@ class BatteryRun:
         # advisory: verdicts are a pure function of (results, alpha), so
         # the resumed run just recomputes them fresh. v2 files predate
         # the recorded alpha (ck.alpha is None) and keep their
-        # documented refuse-on-mismatch behavior.
+        # documented refuse-on-mismatch behavior. Decisions made by a
+        # DIFFERENT verdict engine are never comparable — not even
+        # advisorily — so an engine mismatch on verdict-bearing state is
+        # a typed refusal, not a silent recompute.
+        if (ck.decisions is not None and self.spec.stop_on_verdict
+                and ck.engine != self.spec.verdict_engine):
+            raise stitch.VerdictEngineMismatch(
+                f"checkpoint {path} holds verdict state computed by the "
+                f"{ck.engine!r} engine (alpha="
+                f"{'unrecorded' if ck.alpha is None else ck.alpha}) but "
+                f"the spec resumes with verdict_engine="
+                f"{self.spec.verdict_engine!r} (alpha={self.spec.alpha}) "
+                f"— the engines' decisions are not comparable; re-run "
+                f"from scratch or resume with the original engine")
         if (ck.decisions is not None and self.spec.stop_on_verdict
                 and (ck.alpha is None or ck.alpha == self.spec.alpha)):
             self._restored_decisions = [int(d) for d in ck.decisions]
+            self._restored_alpha = ck.alpha
+            self._restored_engine = ck.engine
             self.rounds_run = ck.rounds_run
         if ck.n_generators != self.spec.n_generators:
             raise ValueError(

@@ -23,10 +23,24 @@ knockouts never retrace: a campaign's compile count scales with the
 number of phases, not the number of cells (asserted via the session's
 trace counts in ``tests/test_campaign.py``).
 
-Progress lives in the cell-keyed ``CampaignLedger`` (api.py, the v3
-checkpoint discipline) plus one per-phase run checkpoint, so an
-interrupted campaign resumes mid-wave with knocked-out cells still
-knocked out.
+Progress lives in the cell-keyed ``CampaignLedger`` (api.py, the
+job-id-keyed checkpoint discipline) plus one per-phase run checkpoint,
+so an interrupted campaign resumes mid-wave with knocked-out cells
+still knocked out.
+
+Under ``CampaignSpec(verdict_engine="evalue")`` (DESIGN.md §13) the
+knockout currency changes from per-phase Bonferroni boundaries to
+cumulative e-process WEALTH: each stream phase's calibrated e-values
+multiply into the cell's ledger-persisted wealth, a cell FAILs the
+moment cumulative wealth reaches ``1/alpha`` (valid at every look by
+Ville's inequality), and a cell that finishes the last scheduled wave
+merely *borderline* — wealth inside ``[continue_band/alpha, 1/alpha)``
+— is RE-OPENED: a continuation phase at the top wave's scale reads
+fresh (previously unread) words of each cell's sub-stream, up to
+``max_continuations`` times, before the cell is force-decided. Seam
+phases stay knockout-only under either engine: their reads straddle the
+same words the stream phases consume, so their evidence must not be
+double-counted into cell wealth.
 
 Typical use::
 
@@ -40,6 +54,7 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import time
 from typing import List, Optional, Tuple
@@ -84,11 +99,16 @@ def _stream_check_scale(spec: CampaignSpec) -> float:
 class Phase:
     """One screening phase: a battery at a scale, plus the per-cell
     offset rule ("stream" = cells read their own sub-stream; "seam" =
-    cells straddle their right-hand seam for the pairstream check)."""
+    cells straddle their right-hand seam for the pairstream check).
+    ``continuation`` numbers the re-opening passes appended for
+    borderline cells under the e-value engine (0 = a scheduled phase);
+    continuation k advances every cell's offset past the whole grid's
+    first k blocks, so each pass reads fresh words."""
     name: str
     battery: str
     scale: float
     offset_rule: str            # "stream" | "seam"
+    continuation: int = 0
 
 
 @dataclasses.dataclass
@@ -102,6 +122,17 @@ class CampaignResult:
     phase_names: List[str]
     rounds_run: int
     wall_s: float
+    log_wealth: Optional[np.ndarray] = None     # (C,) e-wealth (evalue)
+    continuations: int = 0          # continuation phases opened
+
+    @property
+    def wealth(self) -> Optional[np.ndarray]:
+        """Per-cell e-process wealth in linear space (overflow-capped),
+        cell order; ``None`` under the Bonferroni engine."""
+        if self.log_wealth is None:
+            return None
+        return np.exp(np.minimum(np.asarray(self.log_wealth, np.float64),
+                                 700.0))
 
     @property
     def matrix(self) -> np.ndarray:
@@ -157,12 +188,18 @@ class Campaign:
                 "would overlap")
         self.rounds_run = 0
         self.ledger = self._load_ledger()
+        if (spec.verdict_engine == "evalue"
+                and self.ledger.log_wealth is None):
+            self.ledger.log_wealth = np.zeros((spec.n_cells,), np.float64)
 
     # -- grid bookkeeping --------------------------------------------------
 
     def phases(self) -> List[Phase]:
         """The campaign's phase list: the seam check (grids with >1
-        stream), then the waves in ascending-scale order."""
+        stream), then the waves in ascending-scale order, then one
+        continuation phase per re-opening the ledger has recorded
+        (e-value engine only) — a pure function of (spec, ledger), so a
+        resumed campaign reconstructs the identical list."""
         out = []
         if self.spec.stream_check and self.spec.n_streams > 1:
             out.append(Phase("streamcheck", "pairstream",
@@ -170,6 +207,10 @@ class Campaign:
         for scale in wave_schedule(self.spec.waves):
             out.append(Phase(f"x{scale:g}", self.spec.battery, scale,
                              "stream"))
+        top = max(self.spec.waves)
+        for c in range(1, self.ledger.continuations + 1):
+            out.append(Phase(f"continue{c}", self.spec.battery, top,
+                             "stream", continuation=c))
         return out
 
     def _load_ledger(self) -> CampaignLedger:
@@ -214,10 +255,16 @@ class Campaign:
     def _cell_offset(self, phase: Phase, cell_group: Tuple[int, ...],
                      pair_words: int) -> int:
         """The word offset the phase's RunSpec assigns this dispatch
-        position (``stream_offsets``/``seam_offsets`` grids)."""
+        position (``stream_offsets``/``seam_offsets`` grids).
+        Continuation phase k advances each cell by ``k * S * span``
+        words — past the whole grid's first k stream blocks — so every
+        re-opening reads words no scheduled phase (and no other cell's
+        continuation) has touched."""
         s = int(self.ledger.streams[cell_group[0]])
         if phase.offset_rule == "stream":
-            return int(stream_offsets(s + 1, self.span)[s])
+            base = int(stream_offsets(s + 1, self.span)[s])
+            return base + (phase.continuation * self.spec.n_streams
+                           * self.span)
         return int(seam_offsets(s + 2, self.span, pair_words)[s])
 
     def _run_phase(self, k: int, phase: Phase) -> bool:
@@ -254,6 +301,7 @@ class Campaign:
                        seeds=(self.spec.seed,), scale=phase.scale,
                        policy=self.spec.policy, retry=self.spec.retry,
                        alpha=self.spec.alpha,
+                       verdict_engine=self.spec.verdict_engine,
                        backend=self.spec.backend, offsets=tuple(offs),
                        checkpoint_path=ck, progress=self.spec.progress)
         emit_progress(self.spec.progress,
@@ -270,25 +318,80 @@ class Campaign:
                 v.decided for v in h.verdicts_by_position()[:n_real]),
             raise_on_exhausted=False)
         self.rounds_run += handle.rounds_run
+        completed = handle.done or handle.cancelled
         verdicts = handle.verdicts_by_position()[:n_real]
-        for grp, v in zip(groups, verdicts):
-            if v.decision == stitch.FAIL:
-                for i in grp:           # a failed seam binds both cells
-                    self.ledger.decisions[i] = CELL_FAIL
+        evalue = self.spec.verdict_engine == "evalue"
+        if evalue and phase.offset_rule == "stream":
+            # cumulative-wealth knockout: a stream phase's e-values fold
+            # into the cell's ledger wealth ONCE, when the phase
+            # completes — a stalled phase retries from its checkpoint,
+            # and folding its partial wealth now would double-count on
+            # the retry. Seam phases never reach here: their reads
+            # overlap the stream words, so their evidence stays
+            # knockout-only (the generic branch below).
+            if completed:
+                self._fold_wealth(k, groups, verdicts)
+        else:
+            for grp, v in zip(groups, verdicts):
+                if v.decision == stitch.FAIL:
+                    for i in grp:       # a failed seam binds both cells
+                        self.ledger.decisions[i] = CELL_FAIL
+                        self.ledger.decided_phase[i] = k
+                elif (v.decision == stitch.PASS
+                      and phase.offset_rule == "stream"
+                      and k == len(self.phases()) - 1):
+                    i = grp[0]          # survived the final wave
+                    self.ledger.decisions[i] = CELL_PASS
                     self.ledger.decided_phase[i] = k
-            elif (v.decision == stitch.PASS and phase.offset_rule == "stream"
-                  and k == len(self.phases()) - 1):
-                i = grp[0]              # survived the final wave
+        return completed
+
+    def _fold_wealth(self, k: int, groups, verdicts) -> None:
+        """Fold one completed stream phase's per-cell e-process evidence
+        into the ledger and decide what wealth now decides: FAIL at
+        cumulative wealth >= 1/alpha (Ville boundary, valid mid-campaign);
+        at the LAST currently-scheduled phase, PASS below the
+        continuation band — a borderline cell (wealth in
+        [band/alpha, 1/alpha)) is left UNDECIDED while continuation
+        budget remains, which is what re-opens it."""
+        log_thr = math.log(1.0 / self.spec.alpha)
+        last = k == len(self.phases()) - 1
+        band = self.spec.continue_band
+        for grp, v in zip(groups, verdicts):
+            i = grp[0]
+            self.ledger.log_wealth[i] += v.log_wealth
+            logw = float(self.ledger.log_wealth[i])
+            if logw >= log_thr:
+                self.ledger.decisions[i] = CELL_FAIL
+                self.ledger.decided_phase[i] = k
+            elif last:
+                borderline = (band > 0.0
+                              and logw >= log_thr + math.log(band))
+                if (borderline and self.ledger.continuations
+                        < self.spec.max_continuations):
+                    continue            # re-opened by the next phase
                 self.ledger.decisions[i] = CELL_PASS
                 self.ledger.decided_phase[i] = k
-        return handle.done or handle.cancelled
 
     # -- public ------------------------------------------------------------
 
+    def _wants_continuation(self) -> bool:
+        """True when finishing the current phase list would still leave
+        borderline (undecided) cells AND the spec's continuation budget
+        has re-openings left — the condition under which the campaign
+        appends a continuation phase instead of finishing."""
+        if (self.spec.verdict_engine != "evalue"
+                or self.spec.continue_band <= 0.0
+                or self.ledger.continuations >= self.spec.max_continuations):
+            return False
+        return bool(np.any(self.ledger.decisions == CELL_UNDECIDED))
+
     @property
     def complete(self) -> bool:
-        """True once the ledger records every phase as done."""
-        return self.ledger.phases_done >= len(self.phases())
+        """True once the ledger records every phase as done and no
+        borderline cell is waiting on a continuation re-opening."""
+        if self.ledger.phases_done < len(self.phases()):
+            return False
+        return not self._wants_continuation()
 
     def run_next_phase(self) -> bool:
         """Drive ONE remaining phase — the serve daemon's unit of work
@@ -301,7 +404,18 @@ class Campaign:
         phases = self.phases()
         k = self.ledger.phases_done
         if k >= len(phases):
-            return False
+            if not self._wants_continuation():
+                return False
+            # open a continuation: record it in the ledger FIRST (the
+            # phase list is a pure function of (spec, ledger), so a
+            # crash right after this save resumes into the same phase)
+            self.ledger.continuations += 1
+            self._save_ledger()
+            phases = self.phases()
+            emit_progress(self.spec.progress,
+                          f"continuation {self.ledger.continuations}: "
+                          f"{len(self._survivor_idx())} borderline "
+                          f"cell(s) re-opened on fresh stream words")
         if not self._run_phase(k, phases[k]):
             self._save_ledger()     # decisions so far; phase k retries
             return False
@@ -320,11 +434,15 @@ class Campaign:
         """The per-cell decision matrix as it stands — valid after any
         phase boundary, not just at completion (a serve ticket's interim
         and final result both come from here)."""
+        lw = (np.asarray(self.ledger.log_wealth, np.float64).copy()
+              if (self.spec.verdict_engine == "evalue"
+                  and self.ledger.log_wealth is not None) else None)
         return CampaignResult(
             self.spec, self.spec.cells,
             np.asarray(self.ledger.decisions, np.int8).copy(),
             np.asarray(self.ledger.decided_phase, np.int8).copy(),
-            [p.name for p in self.phases()], self.rounds_run, wall_s)
+            [p.name for p in self.phases()], self.rounds_run, wall_s,
+            log_wealth=lw, continuations=int(self.ledger.continuations))
 
     def run(self) -> CampaignResult:
         """Drive every remaining phase (resuming from the ledger) and

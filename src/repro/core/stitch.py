@@ -22,6 +22,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 from scipy import special as sps
 
+from repro.core import evidence
+
 SUSPECT_P = 1e-4
 _P_FLOOR = 1e-15
 
@@ -180,6 +182,32 @@ def sequential_verdict(results: Dict[int, tuple], n_total: int,
         decision = UNDECIDED
     return Verdict(decision, float(alpha), float(thr), n_checked,
                    int(n_total), tuple(sorted(failed)))
+
+
+# Re-exported so the verdict surface lives in one module: the e-value
+# engine itself is implemented in repro.core.evidence (DESIGN.md §13).
+EvidenceVerdict = evidence.EvidenceVerdict
+evidence_verdict = evidence.evidence_verdict
+VerdictEngineMismatch = evidence.VerdictEngineMismatch
+
+#: The pluggable verdict engines ``RunSpec(verdict_engine=...)`` selects
+#: from. Every engine shares the ``(results, n_total, alpha=...)``
+#: call shape and returns a Verdict-shaped object (``decision`` /
+#: ``decided`` / ``n_checked`` / ``failed_tests``).
+VERDICT_ENGINES = {
+    "bonferroni": sequential_verdict,
+    "evalue": evidence_verdict,
+}
+
+
+def verdict_for(engine: str):
+    """The verdict engine callable registered under ``engine``; raises
+    ``KeyError`` naming the known engines for anything else."""
+    try:
+        return VERDICT_ENGINES[engine]
+    except KeyError:
+        raise KeyError(f"unknown verdict engine {engine!r}; known: "
+                       f"{sorted(VERDICT_ENGINES)}") from None
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,12 @@ sequential verdict engine (alpha from ``--alpha``) decides
 PASS/FAIL/UNDECIDED after every round, and pending rounds for a
 definitively-failed generator are cancelled instead of dispatched.
 
+``--verdict-engine {bonferroni,evalue}`` picks the verdict engine
+(DESIGN.md §13): ``evalue`` scores every test's p-value as an e-value
+and multiplies them into an anytime-valid wealth process — FAIL the
+moment wealth crosses 1/alpha — and the ``--json`` payload gains an
+``"evidence"`` section with each generator's wealth trajectory.
+
 ``--backend {auto,reference,accelerated}`` picks the test-kernel
 implementation (stats/backends.py): ``accelerated`` routes the counting
 hot loops through the Pallas kernels, ``auto`` does so only on real TPU
@@ -101,6 +107,14 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.01,
                     help="family-wise error rate the sequential verdict "
                          "engine spends across the battery")
+    ap.add_argument("--verdict-engine", dest="verdict_engine",
+                    default="bonferroni",
+                    choices=["bonferroni", "evalue"],
+                    help="verdict engine (core/stitch.py registry): "
+                         "bonferroni = the classic sequential test, "
+                         "evalue = anytime-valid e-process wealth "
+                         "(core/evidence.py); evalue adds an 'evidence' "
+                         "section with wealth trajectories to --json")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "accelerated"],
                     help="test-kernel backend (stats/backends.py): "
@@ -246,7 +260,7 @@ def main():
             retry=RetryPolicy(max_retries=args.retries),
             backend=args.backend,
             stream_check=args.stream_check, ledger_path=args.ledger,
-            progress=True)
+            progress=True, verdict_engine=args.verdict_engine)
         campaign = Campaign(session, cspec)
         print(f"campaign: {len(cspec.generators)} source(s) x {args.streams} "
               f"stream(s) | battery={args.battery} waves={waves} "
@@ -287,6 +301,18 @@ def main():
                         for i, (g, s) in enumerate(res.cells)],
                 },
             }
+            if args.verdict_engine != "bonferroni":
+                # conditional section: golden-key consumers of the
+                # classic campaign payload see exactly the historical keys
+                payload["evidence"] = {
+                    "engine": args.verdict_engine,
+                    "threshold": 1.0 / args.alpha,
+                    "continuations": res.continuations,
+                    "cells": [
+                        {"gen": g, "stream": s,
+                         "wealth": float(res.wealth[i]),
+                         "log_wealth": float(res.log_wealth[i])}
+                        for i, (g, s) in enumerate(res.cells)]}
             os.makedirs(os.path.dirname(args.json_path) or ".",
                         exist_ok=True)
             with open(args.json_path, "w") as f:
@@ -307,6 +333,7 @@ def main():
                    retry=RetryPolicy(max_retries=args.retries),
                    checkpoint_path=args.ckpt, progress=True,
                    alpha=args.alpha, stop_on_verdict=args.adaptive,
+                   verdict_engine=args.verdict_engine,
                    backend=args.backend, inject=fault_plan)
     names = spec.generators
     backend_resolved = kernel_backends.resolve(args.backend)
@@ -332,6 +359,7 @@ def main():
                              retry=RetryPolicy(max_retries=args.retries),
                              alpha=args.alpha,
                              stop_on_verdict=args.adaptive,
+                             verdict_engine=args.verdict_engine,
                              backend=args.backend) for p in positions]
         tickets = [queue.submit(s) for s in gen_specs]
         queue.drain()
@@ -411,6 +439,16 @@ def main():
         }
         if serve_info is not None:
             payload["serve"] = serve_info
+        if args.verdict_engine != "bonferroni":
+            # only present under a non-default engine: the wealth
+            # trajectories the anytime-valid verdicts were read off
+            payload["evidence"] = {
+                "engine": args.verdict_engine,
+                "threshold": 1.0 / args.alpha,
+                "runs": {gen: {"wealth": run.verdict.wealth,
+                               "log_wealth": run.verdict.log_wealth,
+                               "trajectory": list(run.verdict.trajectory)}
+                         for gen, run in runs.items()}}
         if args.source:
             # only present when --source was used: golden-key consumers
             # of the classic payload see exactly the historical keys
@@ -453,8 +491,9 @@ def main():
     # (its alpha/2n boundary is looser than SUSPECT_P — applying it to
     # non-adaptive runs would contradict the printed report).
     suspects = sum(run.n_suspect for run in runs.values())
-    failed = args.adaptive and any(run.verdict.decision == "FAIL"
-                                   for run in runs.values())
+    failed = ((args.adaptive or args.verdict_engine != "bonferroni")
+              and any(run.verdict.decision == "FAIL"
+                      for run in runs.values()))
     sys.exit(0 if suspects == 0 and not failed else 1)
 
 

@@ -29,7 +29,7 @@ import numpy as np
 from repro.ckpt import io as ckpt_io
 from repro.core import stitch
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
 
 # decision codes on the wire — same convention as api.CELL_* and the
 # checkpoint's verdict codes
@@ -39,7 +39,8 @@ _CODE_DECISION = {v: k for k, v in _DECISION_CODE.items()}
 
 def cell_digest(battery: str, scale: float, generator: str, seed: int,
                 offset: int, alpha: float, backend: str,
-                source_digest: str = "") -> str:
+                source_digest: str = "",
+                engine: str = "bonferroni") -> str:
     """The cell's content address: a 32-hex-char sha256 prefix over the
     full decision-relevant identity (generator, seed, offset, battery,
     scale, alpha, backend). ``backend`` must be the RESOLVED backend
@@ -55,51 +56,68 @@ def cell_digest(battery: str, scale: float, generator: str, seed: int,
     re-captured or byte-modified file MISSES — same path, different
     bits, different cell. Generator cells pass ``""`` (their name IS
     their content identity), which keeps every digest minted before the
-    BitSource layer byte-identical."""
+    BitSource layer byte-identical.
+
+    ``engine`` is the verdict engine the cell's decision was (or will
+    be) computed under. Folded only when it is not the historical
+    default ("bonferroni"), the same back-compat discipline as
+    ``source_digest``: every pre-engine digest stays byte-identical,
+    while an e-value submission can never be answered by a cached
+    Bonferroni decision (and vice versa)."""
     key = repr((str(battery), float(scale), str(generator), int(seed),
                 int(offset), float(alpha), str(backend)))
     if source_digest:
         key = repr((key, str(source_digest)))
+    if engine != "bonferroni":
+        key = repr((key, "engine", str(engine)))
     return hashlib.sha256(key.encode()).hexdigest()[:32]
 
 
 @dataclasses.dataclass
 class CacheEntry:
     """One cell's memoized outcome: the combined TEST-space results
-    (test index -> (stat, p)), the sequential-verdict decision they
-    recompute to, the alpha it was computed under, the battery size and
-    a completeness flag. ``results``/``decision`` are exactly what a
-    fresh run of the same cell would produce — decisions are a pure
-    function of (results, alpha), which is what makes memoization sound.
+    (test index -> (stat, p)), the decision they recompute to under the
+    entry's verdict engine, the alpha it was computed under, the battery
+    size and a completeness flag. ``results``/``decision`` are exactly
+    what a fresh run of the same cell would produce — decisions are a
+    pure function of (results, alpha, engine), which is what makes
+    memoization sound.
 
-    Wire layout (``ckpt/io`` leaves)::
+    Wire layout (``ckpt/io`` leaves, v2)::
 
       [version, idx (K,) int32, stats (K,) float64, ps (K,) float64,
-       decision int8, alpha float64, n_total int64, complete int8]
+       decision int8, alpha float64, n_total int64, complete int8,
+       engine bytes]
+
+    v1 files (8 leaves, no engine) load as ``engine="bonferroni"`` —
+    the only engine that existed when they were written.
     """
     results: Dict[int, tuple]
     decision: str
     alpha: float
     n_total: int
     complete: bool
+    engine: str = "bonferroni"
     version: int = CACHE_VERSION
 
     @classmethod
     def from_results(cls, results: Dict[int, tuple], n_total: int,
-                     alpha: float) -> "CacheEntry":
+                     alpha: float,
+                     engine: str = "bonferroni") -> "CacheEntry":
         """Build an entry from a finished (or verdict-decided) cell's
         combined results; decision and completeness are derived, never
         trusted from the caller."""
-        verdict = stitch.sequential_verdict(results, n_total, alpha)
+        verdict = stitch.verdict_for(engine)(results, n_total, alpha)
         complete = not stitch.missing(results, n_total)
         return cls(dict(results), verdict.decision, float(alpha),
-                   int(n_total), complete)
+                   int(n_total), complete, str(engine))
 
-    def verdict(self) -> stitch.Verdict:
-        """The sequential verdict recomputed from the stored results —
-        bitwise the one the original run reported (pure function)."""
-        return stitch.sequential_verdict(self.results, self.n_total,
-                                         self.alpha)
+    def verdict(self):
+        """The verdict recomputed from the stored results under the
+        entry's engine — bitwise the one the original run reported
+        (pure function)."""
+        return stitch.verdict_for(self.engine)(self.results, self.n_total,
+                                               self.alpha)
 
     def serves(self, stop_on_verdict: bool) -> bool:
         """Can this entry satisfy a resubmission? A complete entry
@@ -112,25 +130,38 @@ class CacheEntry:
 
     @classmethod
     def load(cls, path: str) -> "CacheEntry":
-        """Read (and version-check) one cache file."""
+        """Read (and version-check) one cache file — v2 (9 leaves, with
+        engine) or the historical v1 (8 leaves, Bonferroni-only)."""
         leaves = ckpt_io.load_flat(path)
-        if len(leaves) != 8:
+        if len(leaves) == 9:                    # v2: + engine
+            ver, idx, st, pv, dec, alpha, n_total, complete, eng = leaves
+            if int(ver) != CACHE_VERSION:
+                raise ValueError(
+                    f"cache entry {path} declares version {int(ver)}; "
+                    f"this build reads v{CACHE_VERSION}")
+            engine = (bytes(eng.reshape(-1)[0]).decode()
+                      if eng.size else "bonferroni")
+            version = CACHE_VERSION
+        elif len(leaves) == 8:                  # v1: pre-engine
+            ver, idx, st, pv, dec, alpha, n_total, complete = leaves
+            if int(ver) != 1:
+                raise ValueError(
+                    f"cache entry {path} declares version {int(ver)} "
+                    "in an 8-leaf (v1) layout")
+            engine = "bonferroni"
+            version = 1
+        else:
             raise ValueError(f"cache entry {path} has {len(leaves)} "
-                             "leaves; expected 8")
-        ver, idx, st, pv, dec, alpha, n_total, complete = leaves
-        if int(ver) != CACHE_VERSION:
-            raise ValueError(
-                f"cache entry {path} declares version {int(ver)}; "
-                f"this build reads v{CACHE_VERSION}")
+                             "leaves; expected 8 (v1) or 9 (v2)")
         results = {int(i): (float(s), float(p))
                    for i, s, p in zip(np.asarray(idx, np.int32),
                                       np.asarray(st, np.float64),
                                       np.asarray(pv, np.float64))}
         return cls(results, _CODE_DECISION[int(dec)], float(alpha),
-                   int(n_total), bool(int(complete)), CACHE_VERSION)
+                   int(n_total), bool(int(complete)), engine, version)
 
     def save(self, path: str) -> None:
-        """Write the 8-leaf wire layout (atomic — ``ckpt_io.save``)."""
+        """Write the 9-leaf v2 wire layout (atomic — ``ckpt_io.save``)."""
         idx = np.asarray(sorted(self.results), np.int32)
         ckpt_io.save(path, [
             np.int64(CACHE_VERSION), idx,
@@ -138,7 +169,8 @@ class CacheEntry:
             np.asarray([self.results[int(i)][1] for i in idx], np.float64),
             np.int8(_DECISION_CODE[self.decision]),
             np.float64(self.alpha), np.int64(self.n_total),
-            np.int8(1 if self.complete else 0)])
+            np.int8(1 if self.complete else 0),
+            np.asarray([self.engine.encode()])])
 
 
 class ResultCache:

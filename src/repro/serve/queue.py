@@ -93,7 +93,9 @@ def spec_cells(spec: RunSpec) -> List[_Cell]:
     captured source's cell additionally folds the FILE CONTENT digest
     (``cell_digest``'s ``source_digest``): resubmitting the same capture
     hits its memoized verdict with zero dispatches, while a re-captured
-    or byte-modified file is a different cell and misses."""
+    or byte-modified file is a different cell and misses. The spec's
+    verdict engine folds in too (non-default only), so a cached
+    Bonferroni decision can never answer an e-value submission."""
     resolved = kernel_backends.resolve(spec.backend)
     cells = []
     for g, src in enumerate(spec.sources):
@@ -104,7 +106,8 @@ def spec_cells(spec: RunSpec) -> List[_Cell]:
                                        spec.seeds[g], off, spec.alpha,
                                        resolved,
                                        src.digest() if src.captured
-                                       else ""),
+                                       else "",
+                                       engine=spec.verdict_engine),
                            src))
     return cells
 
@@ -112,15 +115,18 @@ def spec_cells(spec: RunSpec) -> List[_Cell]:
 def admission_key(spec: RunSpec) -> tuple:
     """The compatibility class admission batching coalesces within:
     specs agreeing on (battery, scale, alpha, resolved backend, policy,
-    stop_on_verdict, fault plan) can share one dispatch — everything
-    else about them (generators, seeds, offsets) is a runtime argument
-    of the merged run. A spec carrying an ``inject`` plan only batches
-    with specs carrying the SAME plan (fault injection is a property of
-    the shared dispatch, so strangers must not inherit it silently)."""
+    stop_on_verdict, fault plan, verdict engine) can share one dispatch
+    — everything else about them (generators, seeds, offsets) is a
+    runtime argument of the merged run. A spec carrying an ``inject``
+    plan only batches with specs carrying the SAME plan (fault
+    injection is a property of the shared dispatch, so strangers must
+    not inherit it silently); engines must match because the engine
+    steers the merged run's early stopping and cache entries."""
     policy = get_policy(spec.policy)
     return (spec.battery, float(spec.scale), float(spec.alpha),
             kernel_backends.resolve(spec.backend), policy.name,
-            policy.signature(), bool(spec.stop_on_verdict), spec.inject)
+            policy.signature(), bool(spec.stop_on_verdict), spec.inject,
+            spec.verdict_engine)
 
 
 class Ticket:
@@ -477,7 +483,8 @@ class SubmissionQueue:
         content-derived name so a restarted daemon resumes it. Cells
         carry their ``BitSource`` through admission, so captured buffers
         batch alongside generator positions unchanged."""
-        battery, scale, alpha, backend, _pname, _psig, sov, inject = key
+        (battery, scale, alpha, backend, _pname, _psig, sov, inject,
+         engine) = key
         offsets = (tuple(c.offset for c in cells)
                    if any(c.offset for c in cells) else None)
         ck = (os.path.join(self.state_dir, f"batch-{digest}.ck")
@@ -494,7 +501,7 @@ class SubmissionQueue:
                 riders[0].spec.retry, max_retries=max(
                     t.spec.retry.max_retries for t in riders)),
             checkpoint_path=ck, alpha=alpha, stop_on_verdict=sov,
-            backend=backend, offsets=offsets,
+            verdict_engine=engine, backend=backend, offsets=offsets,
             inject=self.inject if self.inject is not None else inject)
 
     # -- the daemon's advance ----------------------------------------------
@@ -556,7 +563,8 @@ class SubmissionQueue:
         n_total = len(self.session.entries(h.spec))
         per_res = h.results_by_position()
         for c, res in zip(batch.cells, per_res):
-            entry = CacheEntry.from_results(res, n_total, h.spec.alpha)
+            entry = CacheEntry.from_results(res, n_total, h.spec.alpha,
+                                            engine=h.spec.verdict_engine)
             if entry.serves(stop_on_verdict=True):   # sellable to someone
                 self.cache.put(c.digest, entry)
         groups = {t.id: sorted(t._positions.values())
@@ -587,7 +595,8 @@ class SubmissionQueue:
         held = [int(j) for j in h.held()]
         n_total = len(self.session.entries(h.spec))
         per_res = h.results_by_position()
-        entries = [CacheEntry.from_results(res, n_total, h.spec.alpha)
+        entries = [CacheEntry.from_results(res, n_total, h.spec.alpha,
+                                           engine=h.spec.verdict_engine)
                    for res in per_res]
         for c, entry in zip(batch.cells, entries):
             if entry.serves(stop_on_verdict=True):   # sellable to someone
@@ -632,8 +641,8 @@ class SubmissionQueue:
         for g, gen in enumerate(spec.generators):
             combined = (ticket._cached[g].results
                         if g in ticket._cached else dispatched[g])
-            verdict = stitch.sequential_verdict(combined, len(entries),
-                                                spec.alpha)
+            verdict = stitch.verdict_for(spec.verdict_engine)(
+                combined, len(entries), spec.alpha)
             rep = stitch.report(entries, combined, gen, spec.seeds[g])
             runs[gen] = RunResult(combined, rep, rounds_run, retries,
                                   wall, plan_rounds, verdict=verdict)

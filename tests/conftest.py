@@ -5,7 +5,8 @@ installing new packages. When the real library is importable we use it
 unchanged; otherwise we install a tiny deterministic stand-in (fixed
 per-test seed, ``max_examples`` drawn examples) into ``sys.modules``
 before the test modules import it. Only the strategy surface the suite
-actually uses is provided: ``integers``, ``sampled_from``, ``sets``.
+actually uses is provided: ``integers``, ``sampled_from``, ``sets``,
+``floats``, ``lists``, ``permutations``.
 """
 from __future__ import annotations
 
@@ -30,6 +31,33 @@ except ImportError:
     def sampled_from(seq):
         seq = list(seq)
         return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    def floats(min_value, max_value, exclude_min=False,
+               exclude_max=False):
+        def draw(r):
+            lo, hi = float(min_value), float(max_value)
+            x = r.uniform(lo, hi)
+            if exclude_min and x <= lo:
+                x = lo + (hi - lo) * 1e-9
+            if exclude_max and x >= hi:
+                x = hi - (hi - lo) * 1e-9
+            return x
+        return _Strategy(draw)
+
+    def lists(elements, min_size=0, max_size=None):
+        def draw(r):
+            hi = min_size + 10 if max_size is None else max_size
+            return [elements.draw(r)
+                    for _ in range(r.randint(min_size, hi))]
+        return _Strategy(draw)
+
+    def permutations(seq):
+        seq = list(seq)
+        def draw(r):
+            out = list(seq)
+            r.shuffle(out)
+            return out
+        return _Strategy(draw)
 
     def sets(elements, min_size=0, max_size=None):
         def draw(r):
@@ -72,6 +100,9 @@ except ImportError:
     _st.integers = integers
     _st.sampled_from = sampled_from
     _st.sets = sets
+    _st.floats = floats
+    _st.lists = lists
+    _st.permutations = permutations
     _mod.given = given
     _mod.settings = settings
     _mod.strategies = _st

@@ -269,18 +269,18 @@ def test_checkpoint_v2_rejects_wrong_generator_count(tmp_path, session):
         session.submit(bad)
 
 
-def test_checkpoint_layout_is_uniform_v4(tmp_path, session):
+def test_checkpoint_layout_is_uniform_v5(tmp_path, session):
     """Every run — with or without stop_on_verdict — writes the uniform
-    job-id-keyed v4 layout (worker-count independent, DESIGN.md §6), and
+    job-id-keyed v5 layout (worker-count independent, DESIGN.md §6), and
     verdict state always rides along."""
     from repro.ckpt import io as ckpt_io
     from repro.core.api import CKPT_VERSION, Checkpoint
-    ck = str(tmp_path / "v4.ck")
+    ck = str(tmp_path / "v5.ck")
     spec = RunSpec("smallcrush", "splitmix64", 11, scale=SCALE,
                    policy="adaptive", checkpoint_path=ck)
     session.submit(spec).result()
     leaves = ckpt_io.load_flat(ck)
-    assert len(leaves) == 8 and int(leaves[0]) == CKPT_VERSION
+    assert len(leaves) == 10 and int(leaves[0]) == CKPT_VERSION
     saved = Checkpoint.load(ck)
     assert saved.n_generators == 1
     assert list(saved.decisions) == [1]          # PASS rode along

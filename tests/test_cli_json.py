@@ -29,6 +29,10 @@ SERVE_RESUBMIT_KEYS = {"ticket", "cache_hits", "done_at_submit",
                        "dispatches_added"}
 FAULTS_KEYS = {"plan", "events", "quarantines"}
 FAULT_EVENT_KEYS = {"round", "kind", "slot", "job", "rule", "detail"}
+EVIDENCE_KEYS = {"engine", "threshold", "runs"}
+EVIDENCE_RUN_KEYS = {"wealth", "log_wealth", "trajectory"}
+CAMPAIGN_EVIDENCE_KEYS = {"engine", "threshold", "continuations", "cells"}
+EVIDENCE_CELL_KEYS = {"gen", "stream", "wealth", "log_wealth"}
 
 
 def _cli(json_path, *args):
@@ -138,6 +142,69 @@ def test_inject_json_golden_keys(tmp_path):
         assert set(e) == FAULT_EVENT_KEYS
     assert rep["retries"] == 1              # held jobs retried to PASS
     assert rep["runs"]["splitmix64"]["verdict"] == "PASS"
+
+
+def test_evidence_json_golden_keys(tmp_path):
+    """--verdict-engine evalue adds EXACTLY one top-level key
+    ("evidence") to the run payload — and only under a non-default
+    engine, so the classic schema is untouched — carrying each
+    generator's e-process wealth and full per-test trajectory."""
+    path = str(tmp_path / "evidence.json")
+    code, rep = _cli(path, "--battery", "smallcrush", "--gen",
+                     "splitmix64,randu", "--scale", "0.0625", "--seed",
+                     "7", "--adaptive", "--verdict-engine", "evalue")
+    assert code == 1                            # randu FAILs (canary)
+    assert set(rep) == RUN_KEYS | {"evidence"}
+    ev = rep["evidence"]
+    assert set(ev) == EVIDENCE_KEYS
+    assert ev["engine"] == "evalue"
+    assert ev["threshold"] == pytest.approx(1.0 / rep["alpha"])
+    assert set(ev["runs"]) == {"splitmix64", "randu"}
+    for gen, run in ev["runs"].items():
+        assert set(run) == EVIDENCE_RUN_KEYS
+        assert run["wealth"] == pytest.approx(
+            run["trajectory"][-1], rel=1e-6)
+    assert ev["runs"]["randu"]["wealth"] >= ev["threshold"]
+    assert ev["runs"]["splitmix64"]["wealth"] < ev["threshold"]
+    assert rep["runs"]["randu"]["verdict"] == "FAIL"
+    # and the per-gen schema is byte-compatible with the classic run
+    for run in rep["runs"].values():
+        assert set(run) == PER_GEN_KEYS
+
+
+def test_campaign_evidence_json_golden_keys(tmp_path):
+    """The campaign payload's conditional "evidence" section: engine,
+    threshold, continuation count and per-cell wealth."""
+    path = str(tmp_path / "campaign-ev.json")
+    code, rep = _cli(path, "--campaign", "--battery", "smallcrush",
+                     "--gen", "splitmix64,randu", "--streams", "2",
+                     "--waves", "0.0625", "--seed", "7",
+                     "--verdict-engine", "evalue")
+    assert code == 0
+    assert set(rep) == CAMPAIGN_TOP_KEYS | {"evidence"}
+    assert set(rep["campaign"]) == CAMPAIGN_KEYS
+    ev = rep["evidence"]
+    assert set(ev) == CAMPAIGN_EVIDENCE_KEYS
+    assert ev["engine"] == "evalue"
+    assert ev["threshold"] == pytest.approx(1.0 / rep["alpha"])
+    assert ev["continuations"] >= 0
+    assert len(ev["cells"]) == 4
+    for cell in ev["cells"]:
+        assert set(cell) == EVIDENCE_CELL_KEYS
+    # every cell FAILed in a WAVE phase crossed the Ville boundary
+    # (a seam-phase knockout never accumulates wealth — knockout-only)
+    phases = rep["campaign"]["phases"]
+    decided = {(c["gen"], c["stream"]): c
+               for c in rep["campaign"]["cells"]}
+    wave_fails = 0
+    for cell in ev["cells"]:
+        d = decided[(cell["gen"], cell["stream"])]
+        if (d["decision"] == "FAIL" and d["phase"] is not None
+                and phases[d["phase"]] != "streamcheck"):
+            wave_fails += 1
+            assert cell["wealth"] >= ev["threshold"]
+    assert all(decided[("randu", s)]["decision"] == "FAIL"
+               for s in (0, 1))
 
 
 def test_campaign_json_golden_keys(tmp_path):

@@ -99,13 +99,14 @@ def _toy_ckpt():
     return idx, st, pv
 
 
-def test_checkpoint_v4_roundtrip_and_drop(tmp_path):
-    path = str(tmp_path / "v4.ck")
+def test_checkpoint_v5_roundtrip_and_drop(tmp_path):
+    path = str(tmp_path / "v5.ck")
     idx, st, pv = _toy_ckpt()
     Checkpoint(idx, st, pv, np.array([1], np.int8), rounds_run=3,
                alpha=0.05).save(path)
     ck = Checkpoint.load(path)
-    assert ck.version == 4 and ck.rounds_run == 3 and ck.alpha == 0.05
+    assert ck.version == 5 and ck.rounds_run == 3 and ck.alpha == 0.05
+    assert ck.engine == "bonferroni" and ck.log_wealth is None
     assert ck.n_generators == 1
     np.testing.assert_array_equal(ck.job_idx, idx)
     np.testing.assert_array_equal(ck.stats, st)
@@ -131,8 +132,8 @@ def test_checkpoint_v1_v2_load_and_upgrade(tmp_path):
     assert c2.alpha is None                     # v2 never recorded alpha
     assert list(c2.decisions) == [2]
     c2.save(p2)                                 # upgrade on next save
-    assert Checkpoint.load(p2).version == 4
-    assert len(ckpt_io.load_flat(p2)) == 8
+    assert Checkpoint.load(p2).version == 5
+    assert len(ckpt_io.load_flat(p2)) == 10
 
 
 def test_non_adaptive_resume_ignores_alpha_change(tmp_path):
@@ -228,9 +229,9 @@ def test_w8_checkpoint_resumes_on_w4(scenario):
     assert scenario["resume_missing"] == 2
     assert scenario["resume_rounds"] == 1       # ceil(2 jobs / 4 workers)
     assert scenario["resume_bitwise"]
-    assert scenario["resume_ckpt_version"] == 4
+    assert scenario["resume_ckpt_version"] == 5
 
 
 def test_v2_checkpoint_upgrades_across_widths(scenario):
     assert scenario["v2_upgrade_bitwise"]
-    assert scenario["v2_upgraded_leaves"] == 8
+    assert scenario["v2_upgraded_leaves"] == 10

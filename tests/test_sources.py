@@ -276,19 +276,27 @@ def test_external_generator_survives_daemon_restart(tmp_path):
 
 # ------------------------------------------------- wire-format upgrades
 
-def test_checkpoint_v4_roundtrip_and_v3_upgrade(tmp_path):
+def test_checkpoint_v5_roundtrip_and_v3_v4_upgrade(tmp_path):
     path = str(tmp_path / "ck.ck")
     ck = Checkpoint(np.arange(3, dtype=np.int32),
                     np.ones((1, 3)), np.ones((1, 3)) * 0.5,
                     source_uids=np.asarray([b"gen:splitmix64"]))
     ck.save(path)
     back = Checkpoint.load(path)
-    assert back.version == CKPT_VERSION == 4
+    assert back.version == CKPT_VERSION == 5
     assert [u.decode() for u in back.source_uids] == ["gen:splitmix64"]
-    # a v3 file (no source identity) loads transparently
     leaves = ckpt_io.load_flat(path)
+    assert len(leaves) == 10                    # v5 wire layout pin
+    # a v4 file (no engine/wealth leaves) loads transparently
+    v4 = str(tmp_path / "v4.ck")
+    ckpt_io.save(v4, [np.int64(4)] + leaves[1:8])
+    mid = Checkpoint.load(v4)
+    assert mid.version == 4 and mid.engine == "bonferroni"
+    assert mid.log_wealth is None
+    np.testing.assert_array_equal(mid.job_idx, back.job_idx)
+    # a v3 file (no source identity either) loads transparently
     v3 = str(tmp_path / "v3.ck")
-    ckpt_io.save(v3, [np.int64(3)] + leaves[1:-1])
+    ckpt_io.save(v3, [np.int64(3)] + leaves[1:7])
     old = Checkpoint.load(v3)
     assert old.version == 3 and old.source_uids is None
     np.testing.assert_array_equal(old.job_idx, back.job_idx)
@@ -323,7 +331,8 @@ def test_campaign_ledger_v2_upgrade_and_recapture_refusal(tmp_path):
                         ledger_path=ledger_path)
     Campaign(PoolSession(), spec).run()
     led = CampaignLedger.load(ledger_path)
-    assert led.version == CAMPAIGN_LEDGER_VERSION == 2
+    assert led.version == CAMPAIGN_LEDGER_VERSION == 3
+    assert led.engine == "bonferroni" and led.continuations == 0
     assert led.source_uids is not None and led.matches(spec)
     # a v1 ledger (no uids leaf) loads transparently and still matches
     # a generator-only campaign of the same grid
@@ -340,7 +349,14 @@ def test_campaign_ledger_v2_upgrade_and_recapture_refusal(tmp_path):
     old = CampaignLedger.load(v1_path)
     assert old.version == 1 and old.source_uids is None
     assert old.matches(gspec)
-    assert len(leaves) == 9
+    assert len(leaves) == 12
+    # a v2 ledger (uids, but no wealth/engine leaves) also upgrades
+    v2_path = str(tmp_path / "v2.ck")
+    ckpt_io.save(v2_path, [np.int64(2)] + leaves[1:9])
+    mid = CampaignLedger.load(v2_path)
+    assert mid.version == 2 and mid.engine == "bonferroni"
+    assert mid.log_wealth is None and mid.continuations == 0
+    assert mid.matches(spec)
     # re-capture the file: the v2 ledger refuses the new spec
     data = bytearray(open(path, "rb").read())
     data[-1] ^= 0xFF
